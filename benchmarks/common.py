@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: scaled-down Twitch-like problem (the
+paper's protocol at CPU-tractable size), method runners, timers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FOPOConfig
+from repro.data import SyntheticConfig, generate_sessions
+from repro.train import FOPOTrainer, TrainerConfig
+
+_DATA_CACHE: dict = {}
+
+
+def twitch_small(embed_dim: int = 32, num_items: int = 10_000, seed: int = 0):
+    key = (embed_dim, num_items, seed)
+    if key not in _DATA_CACHE:
+        cfg = SyntheticConfig(
+            num_items=num_items,
+            num_users=3000,
+            embed_dim=embed_dim,
+            session_len=16,
+            seed=seed,
+        )
+        _DATA_CACHE[key] = generate_sessions(cfg).split(0.9, seed=seed)
+    return _DATA_CACHE[key]
+
+
+def make_trainer(
+    train_ds,
+    estimator: str = "fopo",
+    *,
+    epsilon: float = 0.8,
+    top_k: int = 256,
+    num_samples: int = 1000,
+    retriever: str = "streaming",
+    lr: float = 3e-3,
+    steps: int = 300,
+    batch_size: int = 32,
+    seed: int = 0,
+) -> FOPOTrainer:
+    p = train_ds.item_embeddings.shape[0]
+    fopo = FOPOConfig(
+        num_items=p,
+        num_samples=num_samples,
+        top_k=min(top_k, p),
+        epsilon=epsilon,
+        retriever=retriever,
+    )
+    tc = TrainerConfig(
+        estimator=estimator, fopo=fopo, batch_size=batch_size,
+        learning_rate=lr, num_steps=steps, checkpoint_every=0, seed=seed,
+    )
+    return FOPOTrainer(tc, train_ds)
+
+
+def timed_train(trainer: FOPOTrainer, steps: int) -> tuple[float, dict]:
+    """Returns (seconds wall excluding compile, history). First step is
+    run separately so jit compile time is excluded (paper times epochs
+    after warmup)."""
+    trainer.train(1)
+    t0 = time.perf_counter()
+    hist = trainer.train(steps - 1)
+    return time.perf_counter() - t0, hist
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,67 @@
+"""Kernel micro-bench: us/call of the pure-jnp paths (the CPU-measurable
+part) + interpret-mode Pallas validation counts. Real TPU timings come
+from the roofline analysis (§Roofline); interpret mode is a correctness
+harness, not a performance proxy, so the jnp twin is what we time here."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels.snis_covgrad.ref import snis_covgrad_ref
+from repro.mips.exact import topk_exact
+from repro.mips.ivf import build_ivf, ivf_query
+from repro.mips.streaming import topk_streaming
+
+
+def _time(fn, *args, n=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> None:
+    p, l, b, k = 50_000, 64, 32, 256
+    kq, ki = jax.random.split(jax.random.PRNGKey(0))
+    q = jax.random.normal(kq, (b, l))
+    items = jax.random.normal(ki, (p, l))
+
+    t_exact = _time(jax.jit(lambda a, c: topk_exact(a, c, k)), q, items)
+    emit("mips_exact_P50k", t_exact, "dense_matmul+topk")
+
+    t_stream = _time(
+        jax.jit(lambda a, c: topk_streaming(a, c, k, block_items=8192)), q, items
+    )
+    emit("mips_streaming_P50k", t_stream, f"vs_exact={t_exact / t_stream:.2f}x")
+
+    index = build_ivf(jax.random.PRNGKey(1), items, num_clusters=256)
+    t_ivf = _time(jax.jit(lambda a: ivf_query(index, a, k, n_probe=8)), q)
+    # recall measurement
+    import numpy as np
+
+    ref = topk_exact(q, items, k)
+    approx = ivf_query(index, q, k, n_probe=8)
+    rec = np.mean([
+        len(set(np.asarray(approx.indices[i]).tolist()) & set(np.asarray(ref.indices[i]).tolist())) / k
+        for i in range(b)
+    ])
+    emit("mips_ivf_P50k", t_ivf, f"vs_exact={t_exact / t_ivf:.2f}x;recall@256={rec:.3f}")
+
+    s = 1000
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    scores = jax.random.normal(ks[0], (b, s))
+    log_q = jax.random.normal(ks[1], (b, s))
+    rewards = jax.random.uniform(ks[2], (b, s))
+    emb = jax.random.normal(ks[3], (b, s, l))
+    t_sc = _time(jax.jit(snis_covgrad_ref), scores, log_q, rewards, emb)
+    emit("snis_covgrad_jnp_B32_S1000", t_sc, "fused_kernel_target=TPU")
+
+
+if __name__ == "__main__":
+    run()

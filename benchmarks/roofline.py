@@ -1,0 +1,77 @@
+"""Roofline report: reads results/dryrun_*.json (produced by
+repro.launch.dryrun) and emits the §Roofline markdown table + CSV rows.
+
+Terms (per cell, single-pod 16x16 = 256 chips):
+  compute    = FLOPs / (chips * 197e12)
+  memory     = bytes / (chips * 819e9)
+  collective = collective_bytes / (chips * 50e9)
+FLOPs/bytes are trip-count-aware jaxpr costs (see launch/jaxpr_cost.py);
+collective bytes are parsed from the compiled HLO with known_trip_count
+multiplication.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(mesh: str) -> list[dict]:
+    path = os.path.join(RESULTS_DIR, f"dryrun_{mesh}.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("skipped"):
+        return (
+            f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | "
+            f"{r['reason'][:60]} |"
+        )
+    if not r.get("ok"):
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | FAILED | {r.get('error','')[:60]} |"
+    t = r["roofline"]
+    ratio = r.get("useful_flops_ratio")
+    return (
+        f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+        f"| {t['collective_s']:.3e} | {t['roofline_fraction']:.2f} | {t['dominant'].replace('_s','')} "
+        f"| useful={ratio:.2f} |"
+    )
+
+
+def markdown_table(mesh: str = "pod") -> str:
+    rows = load(mesh)
+    order = {a: i for i, a in enumerate(
+        ["mistral-large-123b", "granite-8b", "gemma2-2b", "olmoe-1b-7b",
+         "arctic-480b", "graphcast", "dien", "sasrec", "wide-deep", "din"])}
+    rows.sort(key=lambda r: (order.get(r["arch"], 99), r["shape"]))
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | roofline frac | bottleneck | notes |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    lines += [fmt_row(r) for r in rows]
+    return "\n".join(lines)
+
+
+def run() -> None:
+    for mesh in ("pod", "multipod"):
+        rows = load(mesh)
+        ok = sum(1 for r in rows if r.get("ok"))
+        skipped = sum(1 for r in rows if r.get("skipped"))
+        failed = sum(1 for r in rows if r.get("ok") is False)
+        print(f"roofline_{mesh},0.0,ok={ok};skipped={skipped};failed={failed}")
+        for r in rows:
+            if r.get("ok"):
+                t = r["roofline"]
+                print(
+                    f"roofline_{mesh}_{r['arch']}_{r['shape']},"
+                    f"{1e6 * t['step_time_lower_bound_s']:.1f},"
+                    f"dominant={t['dominant']};frac={t['roofline_fraction']:.3f}"
+                )
+
+
+if __name__ == "__main__":
+    print(markdown_table("pod"))

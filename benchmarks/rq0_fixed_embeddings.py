@@ -1,0 +1,86 @@
+"""RQ0 (Table 2): cost of fixing the item embeddings beta.
+
+Compares REINFORCE with beta fixed (Assumption 1) against REINFORCE with
+beta initialised from SVD and *trained*. Reports rP = R_trained/R_fixed
+and rS = T_trained/T_fixed for two embedding dims — the paper finds
+rP <= 0.83 (fixing HELPS) and rS ~ 1.0."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_trainer, twitch_small
+from repro.core.gradients import reinforce_surrogate
+from repro.core.policy import SoftmaxPolicy, linear_tower_apply, linear_tower_init
+from repro.core.rewards import make_session_reward
+from repro.data.loader import BatchLoader
+from repro.optim import adam
+
+
+def _train_reinforce(train_ds, test_ds, train_beta: bool, steps=30, lr=3e-3, s=64):
+    p, l = train_ds.item_embeddings.shape
+    policy = SoftmaxPolicy(tower=linear_tower_apply, item_dim=l)
+    params = {"theta": linear_tower_init(jax.random.PRNGKey(0), l, l)}
+    if train_beta:
+        params["beta"] = jnp.asarray(train_ds.item_embeddings)
+    beta_fixed = jnp.asarray(train_ds.item_embeddings)
+    opt = adam(lr)
+    opt_state = opt.init(params)
+    loader = BatchLoader(
+        {"contexts": train_ds.contexts, "positives": train_ds.positives}, 32
+    )
+
+    @jax.jit
+    def step(params, opt_state, key, ctx, pos):
+        def loss(pr):
+            beta = pr.get("beta", beta_fixed)
+            return reinforce_surrogate(
+                policy, pr["theta"], key, ctx, beta,
+                make_session_reward(pos), s,
+            )
+
+        l_, g = jax.value_and_grad(loss)(params)
+        params, opt_state = opt.update(g, opt_state, params)
+        return params, opt_state, l_
+
+    key = jax.random.PRNGKey(1)
+    # warmup + timed loop
+    b = loader.next_batch()
+    params, opt_state, _ = step(params, opt_state, key, jnp.asarray(b["contexts"]), jnp.asarray(b["positives"]))
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        b = loader.next_batch()
+        key, sub = jax.random.split(key)
+        params, opt_state, _ = step(
+            params, opt_state, sub, jnp.asarray(b["contexts"]), jnp.asarray(b["positives"])
+        )
+    wall = time.perf_counter() - t0
+
+    # test reward (argmax through the final beta)
+    import numpy as np
+
+    beta = params.get("beta", beta_fixed)
+    h = policy.user_embedding(params["theta"], jnp.asarray(test_ds.contexts))
+    top1 = jnp.argmax(h @ beta.T, axis=-1)
+    r = float((np.asarray(top1)[:, None] == test_ds.positives).any(1).mean())
+    return r, wall
+
+
+def run() -> None:
+    for dim in (10, 32):
+        train_ds, test_ds = twitch_small(embed_dim=dim)
+        r_fixed, t_fixed = _train_reinforce(train_ds, test_ds, train_beta=False)
+        r_trained, t_trained = _train_reinforce(train_ds, test_ds, train_beta=True)
+        rp = r_trained / max(r_fixed, 1e-9)
+        rs = t_trained / max(t_fixed, 1e-9)
+        emit(
+            f"rq0_L{dim}",
+            1e6 * (t_fixed / 30),
+            f"rP={rp:.3f};rS={rs:.3f};R_fixed={r_fixed:.4f};R_trained={r_trained:.4f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

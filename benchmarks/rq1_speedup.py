@@ -1,0 +1,36 @@
+"""RQ1 (Figs 1-2): wall-clock speedup of FOPO over REINFORCE.
+
+Per-step time of REINFORCE (O(P) exact sampling + full log-softmax)
+vs the uniform proposal (eps=1) vs the mixture proposal (eps=0.8),
+across embedding dims — RS_method = T_REINFORCE / T_method. The paper
+reports 5-30x; the gap grows with catalog size and shrinks with L."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_trainer, timed_train, twitch_small
+
+STEPS = 12
+
+
+def run() -> None:
+    for dim in (10, 64):
+        train_ds, _ = twitch_small(embed_dim=dim)
+        times = {}
+        for name, kw in (
+            ("reinforce", dict(estimator="reinforce")),
+            ("fopo_uniform", dict(estimator="fopo", epsilon=1.0)),
+            ("fopo_mix", dict(estimator="fopo", epsilon=0.8)),
+        ):
+            tr = make_trainer(train_ds, steps=STEPS, num_samples=256, top_k=256, **kw)
+            wall, _ = timed_train(tr, STEPS)
+            times[name] = wall / STEPS
+        for name in ("fopo_uniform", "fopo_mix"):
+            emit(
+                f"rq1_L{dim}_{name}",
+                1e6 * times[name],
+                f"RS={times['reinforce'] / times[name]:.2f}x_vs_reinforce"
+                f";t_reinforce_ms={1e3 * times['reinforce']:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

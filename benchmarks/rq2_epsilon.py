@@ -1,0 +1,40 @@
+"""RQ2 (Figs 3-5): effect of the mixture parameter eps on policy quality.
+
+Trains at eps in {0.2, 0.5, 0.8, 1.0} plus the adaptive schedule
+(beyond-paper, suggested in the conclusion) and reports final test
+reward. Paper finding: the best policy uses eps != 1."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, make_trainer, twitch_small
+from repro.train import FOPOTrainer
+
+STEPS = 150
+
+
+def run() -> None:
+    train_ds, test_ds = twitch_small(embed_dim=32)
+    rewards = {}
+    for eps in (0.2, 0.5, 0.8, 1.0):
+        tr = make_trainer(train_ds, epsilon=eps, steps=STEPS, num_samples=512, top_k=128)
+        tr.train(STEPS)
+        rewards[eps] = tr.evaluate(test_ds)
+        emit(f"rq2_eps{eps}", 0.0, f"R_test={rewards[eps]:.4f}")
+    # adaptive eps (the conclusion's open question, implemented)
+    tr = make_trainer(train_ds, epsilon=0.8, steps=STEPS, num_samples=512, top_k=128)
+    tr.cfg = dataclasses.replace(tr.cfg, adaptive_eps=True)
+    tr._train_step = tr._build_step()
+    tr.train(STEPS)
+    r_adapt = tr.evaluate(test_ds)
+    emit("rq2_eps_adaptive", 0.0, f"R_test={r_adapt:.4f}")
+    best_fixed = max(rewards, key=rewards.get)
+    emit(
+        "rq2_summary", 0.0,
+        f"best_eps={best_fixed};R_best={rewards[best_fixed]:.4f};"
+        f"R_uniform={rewards[1.0]:.4f};mixture_beats_uniform={rewards[best_fixed] >= rewards[1.0]}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""RQ3 (Fig 6): robustness to the number of retrieved items K.
+
+eps=0.8, sweep K in {32, 64, 128, 256, 512}. Paper finding: performance
+is robust once K covers the top candidates; iteration cost barely moves
+while K << P."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, make_trainer, timed_train, twitch_small
+
+STEPS = 120
+
+
+def run() -> None:
+    train_ds, test_ds = twitch_small(embed_dim=32)
+    for k in (32, 64, 128, 256, 512):
+        tr = make_trainer(train_ds, epsilon=0.8, top_k=k, steps=STEPS, num_samples=512)
+        wall, _ = timed_train(tr, STEPS)
+        r = tr.evaluate(test_ds)
+        emit(f"rq3_K{k}", 1e6 * wall / STEPS, f"R_test={r:.4f}")
+
+
+if __name__ == "__main__":
+    run()

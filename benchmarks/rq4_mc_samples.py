@@ -1,0 +1,30 @@
+"""RQ4 (Fig 7): effect of the Monte Carlo sample count S.
+
+eps=0.8, K=256, S in {50, 200, 500, 1000}. Paper finding: larger S gives
+better optima; the cost grows sub-linearly (2min -> 3.4min for 20x S on
+their GPU; the vectorised samples amortise)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_trainer, timed_train, twitch_small
+
+STEPS = 120
+
+
+def run() -> None:
+    train_ds, test_ds = twitch_small(embed_dim=32)
+    base_time = None
+    for s in (50, 200, 500, 1000):
+        tr = make_trainer(train_ds, epsilon=0.8, top_k=256, num_samples=s, steps=STEPS)
+        wall, _ = timed_train(tr, STEPS)
+        r = tr.evaluate(test_ds)
+        if base_time is None:
+            base_time = wall
+        emit(
+            f"rq4_S{s}",
+            1e6 * wall / STEPS,
+            f"R_test={r:.4f};time_vs_S50={wall / base_time:.2f}x",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run rq1 rq4    # subset
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline rows are
+derived from the dry-run artifacts (results/dryrun_*.json); run
+``python -m repro.launch.dryrun --all --mesh both`` first to refresh.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    grad_quality,
+    kernel_bench,
+    roofline,
+    rq0_fixed_embeddings,
+    rq1_speedup,
+    rq2_epsilon,
+    rq3_topk,
+    rq4_mc_samples,
+)
+
+SUITES = {
+    "rq0": rq0_fixed_embeddings.run,
+    "rq1": rq1_speedup.run,
+    "rq2": rq2_epsilon.run,
+    "rq3": rq3_topk.run,
+    "rq4": rq4_mc_samples.run,
+    "gradq": grad_quality.run,
+    "kernels": kernel_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        SUITES[name]()
+        print(f"_suite_{name}_wall_s,{(time.time() - t0) * 1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Distributed MIPS: row-sharded catalog, per-shard streaming top-K,
+global K-merge — the training-time retrieval pattern that scales FOPO to
+catalogs that do not fit one device (DESIGN.md §3).
+
+Runs on 8 simulated devices (set before jax import):
+
+    PYTHONPATH=src python examples/distributed_retrieval.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.mips import make_sharded_topk_fn, topk_exact  # noqa: E402
+
+
+def main() -> None:
+    print(f"devices: {len(jax.devices())}")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    p, l, b, k = 100_000, 64, 16, 32
+    kq, ki = jax.random.split(jax.random.PRNGKey(0))
+    queries = jax.random.normal(kq, (b, l))
+    items = jax.random.normal(ki, (p, l))  # catalog sharded over `model`
+
+    fn = make_sharded_topk_fn(mesh, k, "model", block_items=4096)
+    with mesh:
+        out = fn(queries, items)
+
+    ref = topk_exact(queries, items, k)
+    agree = (np.sort(out.indices, -1) == np.sort(np.asarray(ref.indices), -1)).mean()
+    print(f"sharded top-{k} over P={p} on {mesh.devices.size} devices")
+    print(f"agreement with dense oracle: {agree * 100:.2f}%")
+    print(f"communication: {mesh.shape['model']} shards x B{b} x K{k} candidates "
+          f"(never O(P))")
+    assert agree == 1.0
+
+
+if __name__ == "__main__":
+    main()

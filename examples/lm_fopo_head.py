@@ -1,0 +1,87 @@
+"""Beyond-paper integration: the FOPO estimator on an LM vocabulary head.
+
+A reward-driven next-token objective (RL-style) over a large vocab has
+the same O(V) softmax bottleneck the paper attacks for catalogs. This
+demo fine-tunes a tiny LM's user-facing behaviour ("prefer tokens from a
+target set") with the SNIS covariance gradient + top-K mixture proposal
+over the frozen output embedding — Assumption 1, verbatim.
+
+    PYTHONPATH=src python examples/lm_fopo_head.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lm_head import FopoLMHeadConfig, fopo_lm_head_loss
+from repro.models import lm
+from repro.models.configs_base import LMConfig
+from repro.optim import adam
+
+
+def main() -> None:
+    cfg = LMConfig(
+        name="tiny", num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=4096, dtype="float32",
+    )
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 8, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+
+    # reward: 1 if the sampled token is in the target set (e.g. a domain
+    # lexicon); production would plug an offline reward model here
+    target_tokens = jnp.arange(100, 200)
+
+    def token_rewards(actions):  # [N, S'] -> [N, S']
+        return (actions[..., None] == target_tokens).any(-1).astype(jnp.float32)
+
+    head_cfg = FopoLMHeadConfig(
+        vocab_size=cfg.vocab_size, num_samples=128, top_k=64, epsilon=0.5,
+        retriever="exact",
+    )
+    out_embed = jax.lax.stop_gradient(params["unembed"])  # frozen (Assumption 1)
+
+    opt = adam(2e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, key):
+        def loss(p):
+            logits, _ = lm.forward(cfg, p, toks)
+            hidden = _final_hidden(cfg, p, toks)
+            l, aux = fopo_lm_head_loss(
+                hidden.reshape(-1, cfg.d_model), out_embed, token_rewards, key, head_cfg
+            )
+            return l
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt_state = opt.update(g, opt_state, params)
+        return params, opt_state, l
+
+    def _final_hidden(cfg, p, toks):
+        # forward without the unembed matmul
+        from repro.models.layers import rms_norm
+
+        x = jnp.take(p["embed"], toks, axis=0)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda q: q[i], p["layers"])
+            x, _ = lm._layer_fwd(cfg, x, layer, jnp.asarray(False), positions)
+        return rms_norm(x, p["final_norm"], cfg.rms_eps)
+
+    def target_mass(p):
+        logits, _ = lm.forward(cfg, p, toks)
+        probs = jax.nn.softmax(logits[:, -1], axis=-1)
+        return float(jnp.mean(jnp.sum(probs[:, 100:200], axis=-1)))
+
+    print(f"target-token probability before: {target_mass(params):.4f}")
+    key = jax.random.PRNGKey(7)
+    for i in range(100):
+        key, sub = jax.random.split(key)
+        params, opt_state, loss = step(params, opt_state, sub)
+    print(f"target-token probability after:  {target_mass(params):.4f}")
+    print("(trained through the SNIS covariance gradient — the full-vocab "
+          "softmax was never computed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: train a FOPO policy on a synthetic session-completion task
+in under a minute on CPU, then serve recommendations through MIPS.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import FOPOConfig
+from repro.data import SyntheticConfig, generate_sessions
+from repro.mips import topk_exact
+from repro.train import FOPOTrainer, TrainerConfig
+
+
+def main() -> None:
+    # 1. a Twitch-like (tiny) catalog: sessions split into observed X /
+    #    held-out Y, SVD item embeddings, mean-embedding user contexts
+    data = generate_sessions(
+        SyntheticConfig(num_items=3000, num_users=1500, embed_dim=24, session_len=16)
+    )
+    train_ds, test_ds = data.split(0.9)
+
+    # 2. Algorithm 1: MIPS top-K mixture proposal + SNIS covariance gradient
+    trainer = FOPOTrainer(
+        TrainerConfig(
+            estimator="fopo",
+            fopo=FOPOConfig(
+                num_items=3000, num_samples=256, top_k=64, epsilon=0.8,
+                retriever="streaming",
+            ),
+            batch_size=32,
+            learning_rate=3e-3,
+            num_steps=200,
+        ),
+        train_ds,
+    )
+    print(f"reward before training: {trainer.evaluate(test_ds):.4f} "
+          f"(random = {8 / 3000:.4f})")
+    trainer.train(200, log_every=50)
+    print(f"reward after training:  {trainer.evaluate(test_ds):.4f}")
+
+    # 3. serving: argmax over the catalog via MIPS (Eq. 5)
+    h = trainer.policy.user_embedding(
+        trainer.params, jnp.asarray(test_ds.contexts[:5])
+    )
+    top5 = topk_exact(h, trainer.beta, 5)
+    print("sample recommendations (item ids):")
+    for i in range(5):
+        print(f"  user {i}: {top5.indices[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

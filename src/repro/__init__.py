@@ -1,0 +1,10 @@
+"""repro — production-grade JAX framework for Fast Offline Policy Optimization
+(FOPO) at recommendation scale.
+
+Implements Sakhi, Rohde & Gilotte, "Fast Offline Policy Optimization for
+Large Scale Recommendation" (AAAI 2023) as a first-class feature of a
+multi-pod training/serving framework, plus the assigned architecture pool
+(LM transformers, GraphCast-style GNN, recsys rankers).
+"""
+
+__version__ = "1.0.0"

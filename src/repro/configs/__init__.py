@@ -1,0 +1,62 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each config module exports FAMILY, CONFIG, SHAPES, SKIPPED_SHAPES and
+SMOKE_CONFIG. The 10 assigned pool archs plus the paper's own config.
+"""
+from __future__ import annotations
+
+import importlib
+import types
+
+ARCH_IDS = [
+    # LM family (5)
+    "mistral-large-123b",
+    "granite-8b",
+    "gemma2-2b",
+    "olmoe-1b-7b",
+    "arctic-480b",
+    # GNN (1)
+    "graphcast",
+    # recsys (4)
+    "dien",
+    "sasrec",
+    "wide-deep",
+    "din",
+    # the paper's own experiment
+    "fopo-paper",
+]
+
+_MODULES = {
+    "mistral-large-123b": "mistral_large_123b",
+    "granite-8b": "granite_8b",
+    "gemma2-2b": "gemma2_2b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "arctic-480b": "arctic_480b",
+    "graphcast": "graphcast",
+    "dien": "dien",
+    "sasrec": "sasrec",
+    "wide-deep": "wide_deep",
+    "din": "din",
+    "fopo-paper": "fopo_paper",
+}
+
+
+def get_arch(arch_id: str) -> types.ModuleType:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch_id, shape_name, cell, skipped_reason|None) for the
+    assigned pool (40 cells)."""
+    for arch_id in ARCH_IDS:
+        if arch_id == "fopo-paper":
+            continue
+        mod = get_arch(arch_id)
+        for shape_name, cell in mod.SHAPES.items():
+            reason = mod.SKIPPED_SHAPES.get(shape_name)
+            if reason and not include_skipped:
+                yield arch_id, shape_name, cell, reason
+            else:
+                yield arch_id, shape_name, cell, reason

@@ -1,0 +1,52 @@
+"""arctic-480b [moe] — 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128 experts top-2 + dense residual.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+480B total / ~17B active params. Full attention: `long_500k` SKIPPED.
+Experts sharded 2-D (model x data); bf16 Adam moments + microbatching
+(documented memory policy, DESIGN.md §4)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import LM_SHAPES
+from repro.models.configs_base import LMConfig
+
+FAMILY = "lm"
+
+CONFIG = LMConfig(
+    name="arctic-480b",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,  # dense-residual branch hidden
+    vocab_size=32000,
+    num_experts=128,
+    num_experts_per_tok=2,
+    moe_d_ff=4864,
+    dense_residual=True,
+    gated_act="silu",
+    dtype="bfloat16",
+    microbatch=16,
+    moments_dtype="bfloat16",
+)
+
+SHAPES = dict(LM_SHAPES)
+SKIPPED_SHAPES = {"long_500k": "pure full-attention arch (DESIGN.md §5)"}
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=64,
+    vocab_size=256,
+    num_experts=4,
+    num_experts_per_tok=2,
+    moe_d_ff=32,
+    capacity_factor=4.0,
+    dtype="float32",
+    microbatch=0,
+)

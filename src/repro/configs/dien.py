@@ -1,0 +1,30 @@
+"""dien [recsys] — embed_dim=18 seq_len=100 gru_dim=108 mlp=200-80
+interaction=augru. [arXiv:1809.03672; unverified]
+
+FOPO applicability: DIRECT — the stage-1 GRU user vector is h_theta(x);
+FOPO trains it as a policy over the catalog; retrieval via MIPS."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.configs_base import RecsysConfig
+
+FAMILY = "recsys"
+
+CONFIG = RecsysConfig(
+    name="dien",
+    kind="dien",
+    item_vocab=1_000_000,
+    embed_dim=18,
+    seq_len=100,
+    gru_dim=108,
+    mlp_dims=(200, 80),
+)
+
+SHAPES = dict(RECSYS_SHAPES)
+SKIPPED_SHAPES: dict[str, str] = {}
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, item_vocab=2000, seq_len=20, gru_dim=24, mlp_dims=(32, 16)
+)

@@ -1,0 +1,30 @@
+"""din [recsys] — embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80
+interaction=target-attn. [arXiv:1706.06978; paper]
+
+FOPO applicability: DIRECT (the paper's setting) — catalog of 10^6
+items; `retrieval_cand` is MIPS over the catalog (Eq. 5)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.configs_base import RecsysConfig
+
+FAMILY = "recsys"
+
+CONFIG = RecsysConfig(
+    name="din",
+    kind="din",
+    item_vocab=1_000_000,
+    embed_dim=18,
+    seq_len=100,
+    attn_mlp_dims=(80, 40),
+    mlp_dims=(200, 80),
+)
+
+SHAPES = dict(RECSYS_SHAPES)
+SKIPPED_SHAPES: dict[str, str] = {}
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, item_vocab=2000, seq_len=20, attn_mlp_dims=(16, 8), mlp_dims=(32, 16)
+)

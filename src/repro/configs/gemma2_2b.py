@@ -1,0 +1,50 @@
+"""gemma2-2b [dense] — 26L d_model=2304 8H (GQA kv=4) d_ff=9216
+vocab=256000 — local+global alternating, logit softcap. [arXiv:2408.00118; hf]
+
+Hybrid local/global attention: `long_500k` RUNS for this arch (sliding-
+window layers bound the working set; global layers keep the full cache).
+The 256k vocab is the motivating case for the FOPO-LM head (DESIGN §5)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import LM_SHAPES
+from repro.models.configs_base import LMConfig
+
+FAMILY = "lm"
+
+CONFIG = LMConfig(
+    name="gemma2-2b",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    d_ff=9216,
+    vocab_size=256_000,
+    head_dim=256,
+    sliding_window=4096,
+    local_global_alternating=True,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    gated_act="gelu",
+    tie_embeddings=True,
+    dtype="bfloat16",
+    microbatch=32,
+)
+
+SHAPES = dict(LM_SHAPES)
+SKIPPED_SHAPES: dict[str, str] = {}
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG,
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    sliding_window=8,
+    dtype="float32",
+    microbatch=0,
+)

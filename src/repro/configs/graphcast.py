@@ -1,0 +1,30 @@
+"""graphcast [gnn] — n_layers=16 d_hidden=512 mesh_refinement=6
+aggregator=sum n_vars=227 — encoder-processor-decoder mesh GNN.
+[arXiv:2212.12794; unverified]
+
+FOPO applicability: NONE (dense regression, no catalog softmax) —
+implemented without the technique per DESIGN.md §5."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import GNN_SHAPES
+from repro.models.configs_base import GNNConfig
+
+FAMILY = "gnn"
+
+CONFIG = GNNConfig(
+    name="graphcast",
+    num_layers=16,
+    d_hidden=512,
+    aggregator="sum",
+    n_vars=227,
+    mesh_refinement=6,
+)
+
+SHAPES = dict(GNN_SHAPES)
+SKIPPED_SHAPES: dict[str, str] = {}
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, num_layers=3, d_hidden=32, n_vars=8
+)

@@ -1,0 +1,47 @@
+"""mistral-large-123b [dense] — 88L d_model=12288 96H (GQA kv=8)
+d_ff=28672 vocab=32768. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+
+Pure full-attention dense model: `long_500k` is SKIPPED (DESIGN.md §5 —
+a 524288-token dense KV cache is the regime reserved for sub-quadratic
+archs). 123B params: bf16 + bf16 Adam moments + microbatched grad
+accumulation (documented memory policy for the giant archs)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import LM_SHAPES
+from repro.models.configs_base import LMConfig
+
+FAMILY = "lm"
+
+CONFIG = LMConfig(
+    name="mistral-large-123b",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32768,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    gated_act="silu",
+    dtype="bfloat16",
+    microbatch=16,
+    moments_dtype="bfloat16",
+)
+
+SHAPES = dict(LM_SHAPES)
+SKIPPED_SHAPES = {"long_500k": "pure full-attention arch; 500k dense KV cache reserved for sub-quadratic archs (DESIGN.md §5)"}
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    head_dim=16,
+    dtype="float32",
+    microbatch=0,
+)

@@ -1,0 +1,35 @@
+"""sasrec [recsys] — embed_dim=50 n_blocks=2 n_heads=1 seq_len=50
+interaction=self-attn-seq. [arXiv:1808.09781; paper]
+
+FOPO applicability: DIRECT and the flagship integration — SASRec's
+next-item softmax over the million-item catalog is exactly the paper's
+O(P) bottleneck; `train_batch` trains with the SNIS covariance gradient
++ MIPS proposal (objective="fopo")."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.configs_base import RecsysConfig
+
+FAMILY = "recsys"
+
+CONFIG = RecsysConfig(
+    name="sasrec",
+    kind="sasrec",
+    item_vocab=1_000_000,
+    embed_dim=50,
+    seq_len=50,
+    num_blocks=2,
+    num_heads=1,
+    fopo_top_k=256,
+    fopo_num_samples=1000,
+    fopo_epsilon=0.8,
+)
+
+SHAPES = dict(RECSYS_SHAPES)
+SKIPPED_SHAPES: dict[str, str] = {}
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, item_vocab=2000, seq_len=16, fopo_top_k=32, fopo_num_samples=64
+)

@@ -1,0 +1,61 @@
+from repro.core.fopo import FOPOConfig, fopo_loss, make_retriever, reinforce_loss
+from repro.core.gradients import (
+    covariance_gradient_dense_reference,
+    covariance_surrogate,
+    exact_objective,
+    reinforce_surrogate,
+)
+from repro.core.lm_head import FopoLMHeadConfig, fopo_lm_head_loss
+from repro.core.policy import (
+    SoftmaxPolicy,
+    linear_tower_apply,
+    linear_tower_init,
+    make_linear_policy,
+    mlp_tower_apply,
+    mlp_tower_init,
+)
+from repro.core.proposals import (
+    MixtureProposal,
+    ProposalSample,
+    UniformProposal,
+    adaptive_epsilon,
+)
+from repro.core.rewards import (
+    LoggedFeedback,
+    make_dot_reward_model,
+    make_dr_reward,
+    make_ips_reward,
+    make_session_reward,
+)
+from repro.core.snis import snis_covariance_coefficients, snis_expectation, snis_weights
+
+__all__ = [
+    "FOPOConfig",
+    "fopo_loss",
+    "make_retriever",
+    "reinforce_loss",
+    "SoftmaxPolicy",
+    "linear_tower_init",
+    "linear_tower_apply",
+    "mlp_tower_init",
+    "mlp_tower_apply",
+    "make_linear_policy",
+    "MixtureProposal",
+    "UniformProposal",
+    "ProposalSample",
+    "adaptive_epsilon",
+    "LoggedFeedback",
+    "make_session_reward",
+    "make_ips_reward",
+    "make_dr_reward",
+    "make_dot_reward_model",
+    "snis_weights",
+    "snis_expectation",
+    "snis_covariance_coefficients",
+    "exact_objective",
+    "reinforce_surrogate",
+    "covariance_surrogate",
+    "covariance_gradient_dense_reference",
+    "FopoLMHeadConfig",
+    "fopo_lm_head_loss",
+]

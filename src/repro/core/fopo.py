@@ -1,0 +1,141 @@
+"""FOPO — Algorithm 1 assembled: fast offline policy learning.
+
+One training step =
+  1. h = h_theta(x)                       (user tower)
+  2. top-K = retrieve(h)                  (MIPS: exact | streaming | IVF | sharded)
+  3. q = eps/P + (1-eps) softmax(top-K)   (mixture proposal)
+  4. a_1..a_S ~ q                         (S draws per context)
+  5. SNIS weights + covariance gradient   (O(S) — catalog-free)
+  6. optimizer update
+
+The retriever is a plugged function so the same step runs with a dense
+oracle (tests), the streaming Pallas kernel (single device), the IVF
+index (sublinear), or the sharded multi-device retriever (big catalogs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gradients import covariance_surrogate, reinforce_surrogate
+from repro.core.policy import SoftmaxPolicy
+from repro.core.proposals import MixtureProposal, UniformProposal
+from repro.mips.exact import TopK, topk_exact
+
+Retriever = Callable[[jnp.ndarray, jnp.ndarray], TopK]  # (h, beta) -> TopK
+
+
+@dataclasses.dataclass(frozen=True)
+class FOPOConfig:
+    num_items: int
+    num_samples: int = 1000  # S
+    top_k: int = 256  # K
+    epsilon: float = 0.8
+    retriever: str = "streaming"  # exact | streaming | ivf | sharded | pallas
+
+
+def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
+    if cfg.retriever == "exact":
+        return lambda h, beta: topk_exact(h, beta, cfg.top_k)
+    if cfg.retriever == "streaming":
+        from repro.mips.streaming import topk_streaming
+
+        block = kw.get("block_items", 4096)
+        return lambda h, beta: topk_streaming(h, beta, cfg.top_k, block_items=block)
+    if cfg.retriever == "pallas":
+        from repro.kernels.mips_topk import ops as mips_ops
+
+        interpret = kw.get("interpret", True)
+        return lambda h, beta: mips_ops.mips_topk(
+            h, beta, cfg.top_k, interpret=interpret
+        )
+    if cfg.retriever == "ivf":
+        index = kw["index"]  # prebuilt IVFIndex (Assumption 1: beta fixed)
+        n_probe = kw.get("n_probe", 8)
+        from repro.mips.ivf import ivf_query
+
+        return lambda h, beta: ivf_query(index, h, cfg.top_k, n_probe=n_probe)
+    if cfg.retriever == "sharded":
+        from repro.mips.sharded import make_sharded_topk_fn
+
+        fn = make_sharded_topk_fn(kw["mesh"], cfg.top_k, kw.get("axis", "model"))
+        return lambda h, beta: fn(h, beta)
+    raise ValueError(f"unknown retriever {cfg.retriever!r}")
+
+
+def fopo_loss(
+    policy: SoftmaxPolicy,
+    params,
+    key: jax.Array,
+    x: jnp.ndarray,  # [B, Dx]
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings
+    reward_fn,  # actions [B, S] -> [B, S]
+    cfg: FOPOConfig,
+    retriever: Retriever,
+    epsilon: float | jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Scalar surrogate loss whose grad is the SNIS covariance gradient."""
+    eps = cfg.epsilon if epsilon is None else epsilon
+    h = jax.lax.stop_gradient(policy.user_embedding(params, x))  # proposal side
+    if isinstance(eps, float) and eps >= 1.0:
+        prop = UniformProposal(cfg.num_items)
+        sample = prop.sample(key, x.shape[0], cfg.num_samples)
+    else:
+        topk = retriever(h, beta)
+        prop = MixtureProposal(cfg.num_items, float(eps) if isinstance(eps, float) else 0.0)
+        if not isinstance(eps, float):
+            prop = dataclasses.replace(prop, epsilon=0.0)  # pmf uses array path
+        sample = _sample_mixture(prop, key, topk, cfg.num_samples, eps)
+    rewards = jax.lax.stop_gradient(reward_fn(sample.actions))
+    loss, aux = covariance_surrogate(
+        policy, params, x, beta, sample.actions, sample.log_q, rewards
+    )
+    return loss, aux
+
+
+def _sample_mixture(prop: MixtureProposal, key, topk: TopK, s: int, eps):
+    if isinstance(eps, float):
+        return prop.sample(key, topk.indices, topk.scores, s)
+    # traced epsilon (adaptive schedule): re-implement with dynamic eps
+    import jax.random as jr
+
+    batch, k = topk.indices.shape
+    k_arm, k_uni, k_kappa = jr.split(key, 3)
+    uni_arm = jr.uniform(k_arm, (batch, s)) < eps
+    uniform_draw = jr.randint(k_uni, (batch, s), 0, prop.num_items, dtype=jnp.int32)
+    g = jr.gumbel(k_kappa, (batch, s, k), jnp.float32)
+    slot = jnp.argmax(topk.scores[:, None, :] + g, axis=-1).astype(jnp.int32)
+    kappa_draw = jnp.take_along_axis(topk.indices, slot, axis=1)
+    actions = jnp.where(uni_arm, uniform_draw, kappa_draw).astype(jnp.int32)
+    log_kappa_full = jax.nn.log_softmax(topk.scores, axis=-1)
+    hit = actions[:, :, None] == topk.indices[:, None, :]
+    in_topk = hit.any(axis=-1)
+    log_kappa = jnp.where(
+        in_topk,
+        jnp.sum(jnp.where(hit, log_kappa_full[:, None, :], 0.0), axis=-1),
+        -jnp.inf,
+    )
+    log_u = jnp.log(eps) - jnp.log(float(prop.num_items))
+    log_mix = jnp.logaddexp(log_u, jnp.log1p(-eps) + log_kappa)
+    log_q = jnp.where(in_topk, log_mix, log_u)
+    from repro.core.proposals import ProposalSample
+
+    return ProposalSample(
+        actions=actions, log_q=log_q, topk_slot=jnp.where(uni_arm, -1, slot)
+    )
+
+
+def reinforce_loss(
+    policy: SoftmaxPolicy,
+    params,
+    key: jax.Array,
+    x: jnp.ndarray,
+    beta: jnp.ndarray,
+    reward_fn,
+    num_samples: int,
+) -> jnp.ndarray:
+    """The paper's O(P) REINFORCE baseline (exact sampling from pi)."""
+    return reinforce_surrogate(policy, params, key, x, beta, reward_fn, num_samples)

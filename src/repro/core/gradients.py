@@ -1,0 +1,114 @@
+"""Policy-gradient estimators.
+
+Three estimators, in decreasing per-step cost:
+
+  * `exact_objective`      — dense sum over the catalog, O(P). Ground truth.
+  * `reinforce_surrogate`  — REINFORCE with exact sampling from pi_theta and
+                             a leave-one-out baseline, O(P) (paper baseline).
+  * `covariance_surrogate` — the paper's estimator: SNIS + covariance
+                             gradient, O(S*K), catalog-size-free.
+
+Each returns a scalar *surrogate loss* whose jax.grad equals (minus) the
+desired policy-gradient estimate, so any optimizer / AD machinery
+composes. Coefficients inside surrogates are stop_grad'ed — exactly
+Algorithm 1's semantics (weights are evaluated, not differentiated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import SoftmaxPolicy
+from repro.core.snis import snis_covariance_coefficients, snis_weights
+
+
+# ---------------------------------------------------------------------------
+# exact (dense) objective — O(P)
+# ---------------------------------------------------------------------------
+
+def exact_objective(
+    policy: SoftmaxPolicy,
+    params,
+    x: jnp.ndarray,  # [B, Dx]
+    beta: jnp.ndarray,  # [P, L]
+    rewards_dense: jnp.ndarray,  # [B, P] r_hat(a, x_i) for every action
+) -> jnp.ndarray:
+    """R_hat = mean_i sum_a pi(a|x_i) r(a, x_i); loss = -R_hat."""
+    log_pi = policy.log_probs(params, x, beta)  # [B, P]
+    return -jnp.mean(jnp.sum(jnp.exp(log_pi) * rewards_dense, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# REINFORCE baseline — O(P) sampling + O(P) log-prob normalisation
+# ---------------------------------------------------------------------------
+
+def reinforce_surrogate(
+    policy: SoftmaxPolicy,
+    params,
+    key: jax.Array,
+    x: jnp.ndarray,  # [B, Dx]
+    beta: jnp.ndarray,  # [P, L]
+    reward_fn,  # actions [B,S] -> [B,S]
+    num_samples: int,
+) -> jnp.ndarray:
+    """grad = E_{a~pi}[(r - b) grad log pi(a|x)], leave-one-out baseline b."""
+    actions = policy.sample(key, params, x, beta, num_samples)  # [B, S]
+    rewards = jax.lax.stop_gradient(reward_fn(actions))  # [B, S]
+    s = num_samples
+    if s > 1:  # leave-one-out control variate
+        baseline = (jnp.sum(rewards, axis=-1, keepdims=True) - rewards) / (s - 1)
+    else:
+        baseline = jnp.zeros_like(rewards)
+    advantage = jax.lax.stop_gradient(rewards - baseline)
+    log_pi = policy.log_probs(params, x, beta)  # [B, P] — the O(P) cost
+    log_pi_a = jnp.take_along_axis(log_pi, actions, axis=-1)  # [B, S]
+    return -jnp.mean(jnp.sum(advantage * log_pi_a, axis=-1) / s)
+
+
+# ---------------------------------------------------------------------------
+# the paper's estimator — SNIS covariance gradient, O(S*K)
+# ---------------------------------------------------------------------------
+
+def covariance_surrogate(
+    policy: SoftmaxPolicy,
+    params,
+    x: jnp.ndarray,  # [B, Dx]
+    beta: jnp.ndarray,  # [P, L] (fixed — Assumption 1)
+    actions: jnp.ndarray,  # [B, S] proposal draws
+    log_q: jnp.ndarray,  # [B, S] proposal log-pmf at the draws
+    rewards: jnp.ndarray,  # [B, S]
+) -> tuple[jnp.ndarray, dict]:
+    """Surrogate whose gradient is the SNIS covariance gradient.
+
+    grad_theta = sum_s c_s grad_theta f_theta(a_s, x),
+    c_s = stop_grad(wbar_s (r_s - rbar)) — see snis.py. Returns aux
+    diagnostics (ESS, rbar) for monitoring.
+    """
+    scores = policy.scores_at(params, x, beta, actions)  # [B, S] differentiable
+    w = snis_weights(jax.lax.stop_gradient(scores), log_q)
+    coeff = snis_covariance_coefficients(w.wbar, rewards)  # [B, S]
+    coeff = jax.lax.stop_gradient(coeff)
+    # maximise covariance between reward and score direction => minimise -sum
+    loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
+    aux = {
+        "ess": jnp.mean(w.ess),
+        "rbar": jnp.mean(jnp.sum(w.wbar * rewards, axis=-1)),
+        "max_wbar": jnp.mean(jnp.max(w.wbar, axis=-1)),
+    }
+    return loss, aux
+
+
+def covariance_gradient_dense_reference(
+    policy: SoftmaxPolicy,
+    params,
+    x: jnp.ndarray,
+    beta: jnp.ndarray,
+    rewards_dense: jnp.ndarray,  # [B, P]
+):
+    """O(P) closed form of Cov_pi[r, grad f] for tests: must equal
+    -grad exact_objective (the covariance identity, Eq. 8)."""
+
+    def neg_obj(p):
+        return exact_objective(policy, p, x, beta, rewards_dense)
+
+    return jax.grad(neg_obj)(params)

@@ -1,0 +1,65 @@
+"""FOPO-LM: the paper's estimator applied to an LM vocabulary head.
+
+Beyond-paper integration (DESIGN.md §5): a language model's softmax over
+a large vocabulary V is the same O(P) object as the paper's catalog
+softmax. For reward-driven (RL-style) next-token objectives
+
+    J = E_{t} E_{a ~ pi_theta(.|h_t)} [ r(a, t) ]
+
+the gradient through the vocab softmax can be estimated with the SNIS
+covariance gradient and a top-K + uniform mixture proposal, where the
+"item embeddings" are the (tied or untied) output-embedding rows —
+frozen during the FOPO phase, exactly Assumption 1. Gemma-2's 256k vocab
+is the motivating case.
+
+This module is self-contained over hidden states so any backbone
+(repro.models.lm) can call it on its final hidden states.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.proposals import MixtureProposal
+from repro.core.snis import snis_covariance_coefficients, snis_weights
+from repro.mips.exact import topk_exact
+from repro.mips.streaming import topk_streaming
+
+
+@dataclasses.dataclass(frozen=True)
+class FopoLMHeadConfig:
+    vocab_size: int
+    num_samples: int = 256  # S
+    top_k: int = 128  # K
+    epsilon: float = 0.5
+    retriever: str = "streaming"
+    block_items: int = 8192
+
+
+def fopo_lm_head_loss(
+    hidden: jnp.ndarray,  # [N, D] flattened (batch*seq) hidden states
+    out_embed: jnp.ndarray,  # [V, D] frozen output embedding (Assumption 1)
+    token_rewards,  # actions [N, S] -> [N, S] reward fn
+    key: jax.Array,
+    cfg: FopoLMHeadConfig,
+) -> tuple[jnp.ndarray, dict]:
+    """Surrogate loss for the reward-driven vocab head. O(N*(K+S)*D)."""
+    h_prop = jax.lax.stop_gradient(hidden)
+    if cfg.retriever == "exact":
+        topk = topk_exact(h_prop, out_embed, cfg.top_k)
+    else:
+        topk = topk_streaming(h_prop, out_embed, cfg.top_k, cfg.block_items)
+    prop = MixtureProposal(cfg.vocab_size, cfg.epsilon)
+    sample = prop.sample(key, topk.indices, topk.scores, cfg.num_samples)
+    rewards = jax.lax.stop_gradient(token_rewards(sample.actions))
+    # differentiable scores of sampled tokens
+    emb = jnp.take(out_embed, sample.actions, axis=0)  # [N, S, D]
+    scores = jnp.einsum("nd,nsd->ns", hidden, emb)
+    w = snis_weights(jax.lax.stop_gradient(scores), sample.log_q)
+    coeff = jax.lax.stop_gradient(
+        snis_covariance_coefficients(w.wbar, rewards)
+    )
+    loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
+    return loss, {"ess": jnp.mean(w.ess)}

@@ -1,0 +1,121 @@
+"""Softmax policies over large discrete action spaces.
+
+The policy is pi_theta(a|x) = exp(f_theta(a,x)) / Z_theta(x) with the
+MIPS-compatible bilinear form f_theta(a, x) = h_theta(x)^T beta_a
+(paper, "Parametrizing the policy"). beta is the fixed item-embedding
+matrix (Assumption 1); h_theta is the trainable user tower.
+
+Towers are pure functions of (params, x) so they compose with jax
+transformations; params are pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Tower = Callable[[Params, jnp.ndarray], jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# user towers h_theta
+# ---------------------------------------------------------------------------
+
+def linear_tower_init(key: jax.Array, dim_in: int, dim_out: int) -> Params:
+    """theta in R^{L x L} as in the paper: h_theta(x) = theta^T x."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dim_in, jnp.float32))
+    return {"w": jax.random.normal(key, (dim_in, dim_out), jnp.float32) * scale}
+
+
+def linear_tower_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w"]
+
+
+def mlp_tower_init(key: jax.Array, dims: tuple[int, ...]) -> Params:
+    """Small MLP tower (beyond-paper capacity knob): dims = (in, h1, ..., out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, (d_in, d_out) in zip(keys, zip(dims[:-1], dims[1:])):
+        scale = jnp.sqrt(2.0 / d_in)
+        layers.append(
+            {
+                "w": jax.random.normal(k, (d_in, d_out), jnp.float32) * scale,
+                "b": jnp.zeros((d_out,), jnp.float32),
+            }
+        )
+    return {"layers": layers}
+
+
+def mlp_tower_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    layers = params["layers"]
+    for i, layer in enumerate(layers):
+        h = h @ layer["w"] + layer["b"]
+        if i + 1 < len(layers):
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# the policy object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxPolicy:
+    """pi_theta(a|x) = softmax_a(h_theta(x)^T beta_a).
+
+    `tower` maps (params, x[B, Dx]) -> h[B, L]; `item_dim` == L.
+    beta is NOT stored here — it is passed explicitly so it can live
+    sharded on the mesh (model-axis rows) or inside a MIPS index.
+    """
+
+    tower: Tower
+    item_dim: int
+
+    def user_embedding(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        return self.tower(params, x)
+
+    def scores(self, params: Params, x: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+        """Full score matrix f_theta(., x) of shape [B, P]. O(P) — small-P only."""
+        return self.user_embedding(params, x) @ beta.T
+
+    def scores_at(
+        self, params: Params, x: jnp.ndarray, beta: jnp.ndarray, actions: jnp.ndarray
+    ) -> jnp.ndarray:
+        """f_theta(a_s, x) for sampled actions [B, S] -> [B, S]. O(S*L)."""
+        h = self.user_embedding(params, x)  # [B, L]
+        b = jnp.take(beta, actions, axis=0)  # [B, S, L]
+        return jnp.einsum("bl,bsl->bs", h, b)
+
+    def log_probs(self, params: Params, x: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+        """Full log pi_theta(.|x) [B, P]. O(P) — for baselines/tests."""
+        s = self.scores(params, x, beta)
+        return jax.nn.log_softmax(s, axis=-1)
+
+    def argmax_action(self, params: Params, x: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+        """Greedy decision rule a*_x = argmax_a f_theta(a, x) (Eq. 5), dense."""
+        return jnp.argmax(self.scores(params, x, beta), axis=-1)
+
+    def sample(
+        self,
+        key: jax.Array,
+        params: Params,
+        x: jnp.ndarray,
+        beta: jnp.ndarray,
+        num_samples: int,
+    ) -> jnp.ndarray:
+        """Exact sampling from pi_theta — O(P) via Gumbel trick. Baseline only."""
+        s = self.scores(params, x, beta)  # [B, P]
+        g = jax.random.gumbel(key, (num_samples,) + s.shape, s.dtype)
+        return jnp.argmax(s[None] + g, axis=-1).T  # [B, S]
+
+
+def make_linear_policy(dim_context: int, item_dim: int) -> SoftmaxPolicy:
+    return SoftmaxPolicy(tower=linear_tower_apply, item_dim=item_dim)
+
+
+def make_mlp_policy(item_dim: int) -> SoftmaxPolicy:
+    return SoftmaxPolicy(tower=mlp_tower_apply, item_dim=item_dim)

@@ -1,0 +1,124 @@
+"""Proposal distributions q(.|x) for self-normalised importance sampling.
+
+The paper's proposal is the mixture
+
+    q_{K,eps}(a|x) = eps/P + (1-eps) * kappa(a|x)        if a in topK(x)
+                   = eps/P                               otherwise
+
+where kappa is the softmax of the policy scores restricted to the top-K
+actions retrieved by MIPS (alpha_K(x) = argsort(h(x)^T beta)[:K]).
+
+Everything here works on a *batch* of contexts: the top-K sets are
+[B, K] index/score arrays produced by any retriever in `repro.mips`.
+All ops are O(S + K), never O(P).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ProposalSample(NamedTuple):
+    """S draws per context plus everything SNIS needs to weight them."""
+
+    actions: jnp.ndarray  # [B, S] int32 — global item ids
+    log_q: jnp.ndarray  # [B, S] float32 — log q(a_s | x)
+    # book-keeping for cheap score lookup: if a_s came from the top-K arm we
+    # already know its score; -1 marks uniform-arm draws.
+    topk_slot: jnp.ndarray  # [B, S] int32 — slot in the top-K list or -1
+
+
+@dataclasses.dataclass(frozen=True)
+class MixtureProposal:
+    """q_{K,eps}: eps-mixture of uniform(P) and softmax-over-top-K."""
+
+    num_items: int
+    epsilon: float
+
+    # -- pmf -----------------------------------------------------------------
+    def log_prob(
+        self,
+        actions: jnp.ndarray,  # [B, S]
+        topk_indices: jnp.ndarray,  # [B, K]
+        topk_scores: jnp.ndarray,  # [B, K]
+    ) -> jnp.ndarray:
+        """log q(a|x) for arbitrary actions. O(S*K) membership check."""
+        eps = jnp.asarray(self.epsilon, jnp.float32)
+        log_kappa_full = jax.nn.log_softmax(topk_scores, axis=-1)  # [B, K]
+        # membership: is action s equal to top-k entry j?
+        hit = actions[:, :, None] == topk_indices[:, None, :]  # [B, S, K]
+        in_topk = hit.any(axis=-1)
+        # log kappa(a) gathered through the one-hot membership: exactly one
+        # hit per row (top-k ids are distinct), so a 0-filled masked sum
+        # selects it. (-inf filler would poison the sum.)
+        log_kappa = jnp.where(
+            in_topk,
+            jnp.sum(jnp.where(hit, log_kappa_full[:, None, :], 0.0), axis=-1),
+            -jnp.inf,
+        )
+        log_uniform = jnp.log(eps) - jnp.log(float(self.num_items))
+        if self.epsilon >= 1.0:
+            return jnp.broadcast_to(log_uniform, actions.shape)
+        log_mix_topk = jnp.logaddexp(log_uniform, jnp.log1p(-eps) + log_kappa)
+        return jnp.where(in_topk, log_mix_topk, log_uniform)
+
+    # -- sampling --------------------------------------------------------------
+    def sample(
+        self,
+        key: jax.Array,
+        topk_indices: jnp.ndarray,  # [B, K]
+        topk_scores: jnp.ndarray,  # [B, K]
+        num_samples: int,
+    ) -> ProposalSample:
+        """Draw S actions per context from the mixture. O(S log K)."""
+        batch, k = topk_indices.shape
+        k_arm, k_uni, k_kappa = jax.random.split(key, 3)
+
+        # arm selection: True -> uniform arm
+        uni_arm = (
+            jax.random.uniform(k_arm, (batch, num_samples)) < self.epsilon
+        )
+        uniform_draw = jax.random.randint(
+            k_uni, (batch, num_samples), 0, self.num_items, dtype=jnp.int32
+        )
+        # kappa arm: categorical over the K scores (Gumbel argmax, K small)
+        g = jax.random.gumbel(k_kappa, (batch, num_samples, k), jnp.float32)
+        slot = jnp.argmax(topk_scores[:, None, :] + g, axis=-1).astype(jnp.int32)
+        kappa_draw = jnp.take_along_axis(topk_indices, slot, axis=1)
+
+        actions = jnp.where(uni_arm, uniform_draw, kappa_draw).astype(jnp.int32)
+        log_q = self.log_prob(actions, topk_indices, topk_scores)
+        topk_slot = jnp.where(uni_arm, jnp.int32(-1), slot)
+        return ProposalSample(actions=actions, log_q=log_q, topk_slot=topk_slot)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformProposal:
+    """eps == 1 degenerate case: q = U({1..P}). Fastest arm, highest bias."""
+
+    num_items: int
+
+    def log_prob(self, actions: jnp.ndarray) -> jnp.ndarray:
+        return jnp.full(actions.shape, -jnp.log(float(self.num_items)), jnp.float32)
+
+    def sample(self, key: jax.Array, batch: int, num_samples: int) -> ProposalSample:
+        actions = jax.random.randint(
+            key, (batch, num_samples), 0, self.num_items, dtype=jnp.int32
+        )
+        return ProposalSample(
+            actions=actions,
+            log_q=self.log_prob(actions),
+            topk_slot=jnp.full((batch, num_samples), -1, jnp.int32),
+        )
+
+
+def adaptive_epsilon(step: int | jnp.ndarray, total_steps: int,
+                     eps_start: float = 1.0, eps_end: float = 0.1) -> jnp.ndarray:
+    """Beyond-paper: the conclusion suggests evolving eps during training
+    (uniform early, top-K-heavy late). Cosine schedule from eps_start to
+    eps_end; used by the `adaptive_eps` trainer mode."""
+    t = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    return eps_end + 0.5 * (eps_start - eps_end) * (1.0 + jnp.cos(jnp.pi * t))

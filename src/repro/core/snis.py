@@ -1,0 +1,54 @@
+"""Self-normalised importance sampling (SNIS) under a softmax policy.
+
+Given S proposal draws a_s ~ q(.|x) with unnormalised policy weights
+
+    omega_s = exp(f_theta(a_s, x)) / q(a_s | x)
+    wbar_s  = omega_s / sum_s' omega_s'
+
+the SNIS estimate of E_{a~pi_theta}[g(a)] is sum_s wbar_s g(a_s) —
+crucially this never touches the normalising constant Z_theta(x).
+
+All computations are done in log space for stability: log omega_s =
+f_s - log q_s, wbar = softmax(log omega).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SNISWeights(NamedTuple):
+    wbar: jnp.ndarray  # [B, S] normalised weights (sum to 1 over S)
+    log_omega: jnp.ndarray  # [B, S] unnormalised log weights
+    ess: jnp.ndarray  # [B] effective sample size 1 / sum wbar^2
+
+
+def snis_weights(scores: jnp.ndarray, log_q: jnp.ndarray) -> SNISWeights:
+    """scores = f_theta(a_s, x) [B, S]; log_q = log q(a_s|x) [B, S]."""
+    log_omega = scores - log_q
+    wbar = jax.nn.softmax(log_omega, axis=-1)
+    ess = 1.0 / jnp.maximum(jnp.sum(wbar**2, axis=-1), 1e-30)
+    return SNISWeights(wbar=wbar, log_omega=log_omega, ess=ess)
+
+
+def snis_expectation(wbar: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+    """E_pi[g] ~= sum_s wbar_s g(a_s). values: [B, S] or [B, S, D]."""
+    if values.ndim == wbar.ndim:
+        return jnp.sum(wbar * values, axis=-1)
+    return jnp.sum(wbar[..., None] * values, axis=-2)
+
+
+def snis_covariance_coefficients(
+    wbar: jnp.ndarray, rewards: jnp.ndarray
+) -> jnp.ndarray:
+    """Per-sample coefficients c_s = wbar_s * (r_s - rbar) such that
+
+        Cov_pi[r, grad f] ~= sum_s c_s * grad f_s
+
+    (the second centering term vanishes because sum_s c_s = 0). These are
+    exactly Algorithm 1's weights and are what the surrogate loss uses.
+    """
+    rbar = jnp.sum(wbar * rewards, axis=-1, keepdims=True)
+    return wbar * (rewards - rbar)

@@ -1,0 +1,13 @@
+from repro.embeddings.bag import (
+    embedding_bag_coo,
+    embedding_bag_padded,
+    hash_bucket,
+)
+from repro.embeddings.table import EmbeddingTableSpec
+
+__all__ = [
+    "embedding_bag_coo",
+    "embedding_bag_padded",
+    "hash_bucket",
+    "EmbeddingTableSpec",
+]

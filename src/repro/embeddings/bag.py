@@ -1,0 +1,82 @@
+"""EmbeddingBag in JAX — gather + segment reduce.
+
+JAX has no native nn.EmbeddingBag or CSR sparse; we build it from
+jnp.take + jax.ops.segment_{sum,max}. Two layouts:
+
+  * COO/ragged: flat `indices [nnz]` + `segment_ids [nnz]` (bag id per
+    entry) — the general layout for truly ragged multi-hot fields.
+  * padded: `indices [B, max_len]` with -1 padding — the TPU-friendly
+    layout (static shapes, no scatter), used by the recsys models.
+
+Both support sum/mean/max combiners and optional per-entry weights.
+The Pallas kernel `repro.kernels.embedding_bag` implements the padded
+layout natively; `ref.py` there delegates to this module.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_coo(
+    table: jnp.ndarray,  # [V, D]
+    indices: jnp.ndarray,  # [nnz] int32
+    segment_ids: jnp.ndarray,  # [nnz] int32, sorted or not
+    num_segments: int,
+    combiner: str = "sum",
+    weights: jnp.ndarray | None = None,  # [nnz]
+) -> jnp.ndarray:
+    rows = jnp.take(table, indices, axis=0)  # [nnz, D]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if combiner == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments)
+    summed = jax.ops.segment_sum(rows, segment_ids, num_segments)
+    if combiner == "sum":
+        return summed
+    if combiner == "mean":
+        ones = jnp.ones_like(indices, jnp.float32)
+        if weights is not None:
+            ones = weights
+        counts = jax.ops.segment_sum(ones, segment_ids, num_segments)
+        return summed / jnp.maximum(counts[:, None], 1e-9)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def embedding_bag_padded(
+    table: jnp.ndarray,  # [V, D]
+    indices: jnp.ndarray,  # [B, T] int32, -1 = padding
+    combiner: str = "sum",
+    weights: jnp.ndarray | None = None,  # [B, T]
+) -> jnp.ndarray:
+    valid = indices >= 0  # [B, T]
+    safe = jnp.maximum(indices, 0)
+    rows = jnp.take(table, safe, axis=0)  # [B, T, D]
+    w = valid.astype(table.dtype)
+    if weights is not None:
+        w = w * weights
+    if combiner == "max":
+        neg = jnp.finfo(table.dtype).min
+        masked = jnp.where(valid[..., None], rows, neg)
+        out = jnp.max(masked, axis=1)
+        # bags with no valid entry -> 0
+        any_valid = valid.any(axis=1, keepdims=True)
+        return jnp.where(any_valid.T.reshape(-1, 1), out, 0.0)
+    rows = rows * w[..., None]
+    summed = jnp.sum(rows, axis=1)  # [B, D]
+    if combiner == "sum":
+        return summed
+    if combiner == "mean":
+        counts = jnp.sum(w, axis=1, keepdims=True)
+        return summed / jnp.maximum(counts, 1e-9)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def hash_bucket(ids: jnp.ndarray, num_buckets: int, salt: int = 0x9E3779B9) -> jnp.ndarray:
+    """Multiplicative hashing for the hashing-trick / QR-embedding path —
+    maps unbounded categorical ids into a fixed table size."""
+    x = ids.astype(jnp.uint32) * jnp.uint32(salt)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    return (x % jnp.uint32(num_buckets)).astype(jnp.int32)

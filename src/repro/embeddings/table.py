@@ -1,0 +1,48 @@
+"""Sharded embedding tables.
+
+Rows are sharded over the mesh `model` axis (vocab sharding). Lookups
+follow the mask-gather-psum pattern (`repro.mips.sharded_gather_rows`).
+At 10^6–10^9 rows this is the only layout that fits; the psum moves
+B*T*D activation bytes, independent of V.
+
+The table abstraction is deliberately thin: params are plain arrays so
+they checkpoint/reshard like everything else. `spec()` reports the
+PartitionSpec the dry-run uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.embeddings.bag import embedding_bag_padded
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingTableSpec:
+    name: str
+    vocab_size: int
+    dim: int
+    combiner: str = "sum"
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> jnp.ndarray:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(self.dim, jnp.float32))
+        return (
+            jax.random.normal(key, (self.vocab_size, self.dim), jnp.float32) * scale
+        ).astype(dtype)
+
+    def spec(self) -> P:
+        """Row (vocab) sharding over the model axis."""
+        return P("model", None)
+
+    def lookup(self, table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+        """Padded multi-hot lookup [B, T] -> [B, D] (jit/pjit-compatible:
+        under pjit the gather becomes an all-gather-free dynamic-slice
+        exchange handled by SPMD partitioning of jnp.take)."""
+        return embedding_bag_padded(table, indices, combiner=self.combiner)
+
+    def lookup_single(self, table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+        """One-hot lookup [...] -> [..., D]."""
+        return jnp.take(table, jnp.maximum(indices, 0), axis=0)

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships three modules:
+  kernel.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, cropping, fallbacks)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.mips_topk import mips_topk, mips_topk_ref
+from repro.kernels.snis_covgrad import snis_covgrad, snis_covgrad_ref
+
+__all__ = [
+    "mips_topk",
+    "mips_topk_ref",
+    "embedding_bag",
+    "embedding_bag_ref",
+    "snis_covgrad",
+    "snis_covgrad_ref",
+    "flash_attention",
+    "flash_attention_ref",
+]

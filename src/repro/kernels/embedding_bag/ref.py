@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the EmbeddingBag kernel — delegates to the
+substrate implementation (repro.embeddings.bag), which is itself
+property-tested against a numpy loop."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.embeddings.bag import embedding_bag_padded
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    combiner: str = "sum",
+    weights: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    return embedding_bag_padded(table, indices, combiner=combiner, weights=weights)

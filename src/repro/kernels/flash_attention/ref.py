@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash-attention kernel: the naive masked
+softmax attention (materialised scores), plus the chunked-scan reference
+from repro.models.attention for cross-validation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [BH, Sq, dh]
+    k: jnp.ndarray,  # [BH, Skv, dh]
+    v: jnp.ndarray,  # [BH, Skv, dh]
+    *,
+    seq_kv: int | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    seq_kv = skv if seq_kv is None else seq_kv
+    scale = 1.0 / float(dh) ** 0.5
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos < seq_kv
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

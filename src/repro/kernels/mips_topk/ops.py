@@ -1,0 +1,54 @@
+"""jit'd public wrapper around the streaming top-K Pallas kernel.
+
+Handles padding (batch to the tile size, catalog to the block size),
+masking, and result cropping; returns the same TopK struct as the
+rest of repro.mips so callers are kernel-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mips_topk.kernel import mips_topk_pallas
+from repro.mips.exact import TopK
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tile_batch", "block_items", "interpret")
+)
+def mips_topk(
+    queries: jnp.ndarray,  # [B, L]
+    items: jnp.ndarray,  # [P, L]
+    k: int,
+    *,
+    tile_batch: int = 128,
+    block_items: int = 1024,
+    interpret: bool = True,
+) -> TopK:
+    b = queries.shape[0]
+    p = items.shape[0]
+    tb = min(tile_batch, max(8, 1 << (b - 1).bit_length()))
+    bp = min(block_items, max(128, 1 << (p - 1).bit_length()))
+    qp = _pad_to(queries, tb, axis=0)
+    ip = _pad_to(items, bp, axis=0)
+    scores, ids = mips_topk_pallas(
+        qp,
+        ip,
+        k=k,
+        num_items=p,
+        tile_batch=tb,
+        block_items=bp,
+        interpret=interpret,
+    )
+    return TopK(scores=scores[:b], indices=ids[:b])

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the streaming top-K MIPS kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mips_topk_ref(queries: jnp.ndarray, items: jnp.ndarray, k: int):
+    """Dense reference: full matmul + lax.top_k. Returns (scores, ids)."""
+    s = (queries.astype(jnp.float32)) @ (items.astype(jnp.float32)).T
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.kernels.snis_covgrad.ops import snis_covgrad
+from repro.kernels.snis_covgrad.ref import snis_covgrad_ref
+
+__all__ = ["snis_covgrad", "snis_covgrad_ref"]

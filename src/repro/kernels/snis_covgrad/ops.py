@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the fused SNIS covariance-gradient kernel.
+
+Pads B to the batch tile and S/L to lane-friendly multiples. Padded
+sample slots get log_q = +BIG so exp(f - log_q) = 0 — they contribute
+nothing to the softmax, the centering, or the reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.snis_covgrad.kernel import snis_covgrad_pallas
+
+_BIG = 3.0e38
+
+
+def _pad_axis(x, mult, axis, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_batch", "interpret"))
+def snis_covgrad(
+    scores: jnp.ndarray,  # [B, S]
+    log_q: jnp.ndarray,  # [B, S]
+    rewards: jnp.ndarray,  # [B, S]
+    emb: jnp.ndarray,  # [B, S, L]
+    *,
+    tile_batch: int = 8,
+    interpret: bool = True,
+):
+    b, s = scores.shape
+    l = emb.shape[-1]
+    sp = _pad_axis(scores, 128, 1)
+    lq = _pad_axis(log_q, 128, 1, value=_BIG)  # zero-weight padding
+    rw = _pad_axis(rewards, 128, 1)
+    em = _pad_axis(_pad_axis(emb, 128, 1), 128, 2)
+    sp = _pad_axis(sp, tile_batch, 0)
+    lq = _pad_axis(lq, tile_batch, 0, value=_BIG)
+    rw = _pad_axis(rw, tile_batch, 0)
+    em = _pad_axis(em, tile_batch, 0)
+    grad, wbar = snis_covgrad_pallas(
+        sp, lq, rw, em, tile_batch=tile_batch, interpret=interpret
+    )
+    return grad[:b, :l], wbar[:b, :s]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused SNIS covariance-gradient kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def snis_covgrad_ref(
+    scores: jnp.ndarray,  # [B, S]
+    log_q: jnp.ndarray,  # [B, S]
+    rewards: jnp.ndarray,  # [B, S]
+    emb: jnp.ndarray,  # [B, S, L]
+):
+    logw = scores - log_q
+    wbar = jax.nn.softmax(logw, axis=-1)
+    rbar = jnp.sum(wbar * rewards, axis=-1, keepdims=True)
+    coeff = wbar * (rewards - rbar)
+    grad = jnp.einsum("bs,bsl->bl", coeff, emb)
+    return grad, wbar

@@ -1,0 +1,3 @@
+"""Launch layer: mesh construction, cell programs, dry-run, train/serve
+CLIs. NOTE: repro.launch.dryrun must be imported first in its process —
+it sets XLA_FLAGS before jax initialises."""

@@ -1,0 +1,228 @@
+"""Roofline math: hardware constants, HLO collective-byte parsing, and
+MODEL_FLOPS (useful-work) estimators per cell.
+
+Hardware: TPU v5e per chip — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link (brief-specified constants).
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_computations(hlo_text: str) -> dict:
+    """Split HLO text into computations: name -> list of op lines.
+    Headers look like `%name (args...) -> type {` (args may nest parens),
+    op lines contain ` = `."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and " = " not in stripped:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps
+
+
+def _line_collective(line: str):
+    m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+ = (.*?) ([a-z\-]+)\(", line)
+    if not m:
+        return None
+    type_str, op = m.groups()
+    base = op
+    if base.endswith("-done"):
+        return None
+    if base.endswith("-start"):
+        base = base[: -len("-start")]
+    if base in _COLLECTIVES:
+        return base, _shape_bytes(type_str)
+    return None
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+
+
+def collective_bytes(hlo_text: str, loop_trips: tuple = ()) -> dict:
+    """Sum result-operand bytes of every collective op, multiplying ops
+    inside while bodies by the loop trip counts. XLA annotates whiles with
+    backend_config known_trip_count — used when present; `loop_trips`
+    (per nesting depth, from the cell program structure) is the fallback.
+
+    `-done` halves of async pairs are skipped. Returns per-kind byte
+    totals, op counts, and per-depth byte subtotals."""
+    comps = _parse_computations(hlo_text)
+
+    # computation -> [(body_name, trip_count|None), ...]
+    calls: dict[str, list[tuple[str, int | None]]] = {}
+    referenced: set[str] = set()
+    for name, lines in comps.items():
+        edges = []
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.groups()
+            referenced.add(cond)
+            referenced.add(body)
+            tm = _TRIP_RE.search(line)
+            edges.append((body, int(tm.group(1)) if tm else None))
+        calls[name] = edges
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    by_depth: dict[int, float] = {}
+
+    def visit(name: str, depth: int, mult: float, seen: frozenset):
+        if name not in comps or name in seen:
+            return
+        for line in comps[name]:
+            c = _line_collective(line)
+            if c:
+                kind, nbytes = c
+                out[kind] += nbytes * mult
+                counts[kind] += 1
+                by_depth[depth] = by_depth.get(depth, 0.0) + nbytes * mult
+        for body, trips in calls.get(name, []):
+            if trips is None:
+                trips = loop_trips[depth] if depth < len(loop_trips) else 1
+            visit(body, depth + 1, mult * trips, seen | {name})
+
+    # collectives only appear in entry computations and while bodies;
+    # fusion bodies never contain them — traverse from unreferenced roots
+    for name in comps:
+        if name not in referenced:
+            visit(name, 0, 1.0, frozenset())
+
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    out["by_depth"] = {str(k): v for k, v in sorted(by_depth.items())}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS estimators (useful work, excl. framework overhead/remat)
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(cfg, cell) -> float:
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    if cell.kind == "decode":
+        return 2.0 * n_active * cell.global_batch
+    raise ValueError(cell.kind)
+
+
+def gnn_model_flops(cfg, cell) -> float:
+    dh = cfg.d_hidden
+    n = cell.n_nodes if not cell.global_batch else cell.n_nodes * cell.global_batch
+    if cell.batch_nodes:  # sampled minibatch: subgraph sizes
+        n_sub = cell.batch_nodes * (1 + cell.fanout[0] + cell.fanout[0] * cell.fanout[1])
+        e_sub = cell.batch_nodes * (cell.fanout[0] + cell.fanout[0] * cell.fanout[1])
+        n, e = n_sub, e_sub
+    else:
+        e = cell.n_edges if not cell.global_batch else cell.n_edges * cell.global_batch
+    per_layer = e * 2 * (2 * dh * dh + dh * dh) + n * 2 * (2 * dh * dh + dh * dh)
+    enc = n * 2 * (cell.d_feat * dh + dh * dh)
+    dec = n * 2 * (dh * dh + dh * cfg.n_vars)
+    fwd = cfg.num_layers * per_layer + enc + dec
+    return 3.0 * fwd  # full-batch/minibatch cells are training cells
+
+
+def _mlp_flops(dims) -> float:
+    return sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def recsys_model_flops(cfg, cell) -> float:
+    d = cfg.embed_dim
+    if cfg.kind == "din":
+        attn = cfg.seq_len * _mlp_flops((4 * d,) + cfg.attn_mlp_dims + (1,))
+        top = _mlp_flops((2 * d,) + cfg.mlp_dims + (1,))
+        per = attn + top
+    elif cfg.kind == "dien":
+        g = cfg.gru_dim
+        gru = cfg.seq_len * 2 * (3 * (d + g) * g + 3 * (g + g) * g)
+        per = gru + _mlp_flops((g + d,) + cfg.mlp_dims + (1,))
+    elif cfg.kind == "sasrec":
+        t = cfg.seq_len
+        blocks = cfg.num_blocks * (4 * 2 * t * d * d + 2 * 2 * t * t * d + 2 * t * 2 * d * d)
+        per = blocks / 1.0
+    elif cfg.kind == "wide_deep":
+        per = _mlp_flops((cfg.n_sparse * d + cfg.n_dense,) + cfg.mlp_dims + (1,))
+    else:
+        raise ValueError(cfg.kind)
+    if cell.kind == "train":
+        return 3.0 * per * cell.global_batch
+    if cell.kind == "serve":
+        return per * cell.global_batch
+    if cell.kind == "retrieval":
+        if cfg.kind == "din":
+            return per * cell.n_candidates
+        return 2.0 * d * cell.n_candidates  # dot-product scoring
+    raise ValueError(cell.kind)
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    coll_bytes: float,
+    chips: int,
+) -> dict:
+    compute_s = hlo_flops / (chips * PEAK_FLOPS)
+    memory_s = hlo_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    bound = max(compute_s, memory_s, collective_s)
+    terms["step_time_lower_bound_s"] = bound
+    terms["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    return terms

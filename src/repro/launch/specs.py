@@ -1,0 +1,349 @@
+"""Cell programs: for every (arch x shape cell), the step function, its
+abstract inputs (ShapeDtypeStruct — never allocated), and the
+in/out shardings. This is the single source of truth the dry-run, the
+roofline bench, and the launcher all consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.dist.sharding import (
+    gnn_param_specs,
+    lm_cache_specs,
+    lm_param_specs,
+    recsys_param_specs,
+)
+from repro.launch import costs
+from repro.models import gnn, lm, recsys
+from repro.models.configs_base import ShapeCell
+from repro.optim.optimizers import adam
+
+SDS = jax.ShapeDtypeStruct
+
+
+class CellProgram(NamedTuple):
+    arch_id: str
+    shape_name: str
+    fn: Any  # the function to jit
+    args: tuple  # abstract arguments (SDS pytrees)
+    in_specs: tuple  # PartitionSpec pytrees, aligned with args
+    out_specs: Any  # PartitionSpec pytree or None (infer)
+    donate_argnums: tuple
+    model_flops: float
+    loop_trips: tuple = ()  # while-nesting trip counts (collective scaling)
+    note: str = ""
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _dp(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def _opt_specs(param_specs):
+    return {"step": P(), "m": param_specs, "v": param_specs}
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_program(
+    arch_id, mod, cell: ShapeCell, multi_pod: bool, opt: bool = False
+) -> CellProgram:
+    cfg = mod.CONFIG
+    dp = _dp(multi_pod)
+    if opt:
+        # §Perf variants: Pallas fused attention for train/prefill cells
+        # (sharded over batch=dp, heads=model), grouped-einsum GQA decode.
+        # With flash attention the per-layer activation working set shrinks
+        # enough that full remat no longer pays — iteration 2 disables it
+        # (trades HBM for the remat recompute FLOPs; peak memory verified
+        # by memory_analysis).
+        flash_axes = ("pod", "data") if multi_pod else ("data",)
+        cfg = dataclasses.replace(
+            cfg,
+            use_flash_kernel=cell.kind in ("train", "prefill"),
+            flash_axes=flash_axes,
+            decode_gqa_einsum=True,
+            remat=not (cell.kind == "train"),
+            # pair_scan's static-window cache slicing REGRESSES when the
+            # cache is sequence-sharded (batch=1 long-context: the dynamic
+            # slice crosses shards -> gather; measured in §Perf B3) — only
+            # enable where the cache is batch-sharded
+            pair_scan=cfg.local_global_alternating
+            and (cell.kind != "decode" or cell.global_batch >= 16),
+        )
+    params = lm.abstract_params(cfg)
+    pspecs = lm_param_specs(params)
+    flops = costs.lm_model_flops(cfg, cell)
+
+    if cell.kind == "train":
+        opt = adam(1e-4, moments_dtype=cfg.moments_dtype)
+        opt_state = jax.eval_shape(opt.init, params)
+        ospecs = _opt_specs(pspecs)
+        step = lm.make_train_step(cfg, opt)
+        tokens = SDS((cell.global_batch, cell.seq_len), jnp.int32)
+        labels = SDS((cell.global_batch, cell.seq_len), jnp.int32)
+        n_micro = max(1, cell.global_batch // (cfg.microbatch or cell.global_batch))
+        chunks = max(1, -(-cell.seq_len // 1024))
+        return CellProgram(
+            arch_id, cell.name, step,
+            (params, opt_state, tokens, labels),
+            (pspecs, ospecs, P(dp, None), P(dp, None)),
+            (pspecs, ospecs, P()),
+            donate_argnums=(0, 1),
+            model_flops=flops,
+            loop_trips=(n_micro, cfg.num_layers, chunks, chunks),
+        )
+
+    if cell.kind == "prefill":
+        cache = lm.abstract_cache(cfg, cell.global_batch, cell.seq_len)
+        batch_axis = dp if cell.global_batch % (32 if multi_pod else 16) == 0 else None
+        cspecs = lm_cache_specs(cache, batch_axis, "model")
+        tokens = SDS((cell.global_batch, cell.seq_len), jnp.int32)
+
+        def fn(params_, tokens_, cache_):
+            return lm.prefill(cfg, params_, tokens_, cache_)
+
+        chunks = max(1, -(-cell.seq_len // 1024))
+        return CellProgram(
+            arch_id, cell.name, fn,
+            (params, tokens, cache),
+            (pspecs, P(batch_axis, None), cspecs),
+            (P(batch_axis, "model"), cspecs),
+            donate_argnums=(2,),
+            model_flops=flops,
+            loop_trips=(cfg.num_layers, chunks, chunks),
+        )
+
+    if cell.kind == "decode":
+        cache = lm.abstract_cache(cfg, cell.global_batch, cell.seq_len)
+        batch_axis = dp if cell.global_batch % (32 if multi_pod else 16) == 0 else None
+        cspecs = lm_cache_specs(cache, batch_axis, "model")
+        token = SDS((cell.global_batch,), jnp.int32)
+
+        def fn(params_, token_, cache_):
+            return lm.decode_step(cfg, params_, token_, cache_)
+
+        return CellProgram(
+            arch_id, cell.name, fn,
+            (params, token, cache),
+            (pspecs, P(batch_axis), cspecs),
+            (P(batch_axis, "model"), cspecs),
+            donate_argnums=(2,),
+            model_flops=flops,
+            loop_trips=(cfg.num_layers,),
+        )
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_program(arch_id, mod, cell: ShapeCell, multi_pod: bool) -> CellProgram:
+    cfg = mod.CONFIG
+    dp = _dp(multi_pod)
+    if cell.batch_nodes:  # sampled minibatch: static padded subgraph
+        n = cell.batch_nodes * (1 + cell.fanout[0] + cell.fanout[0] * cell.fanout[1])
+        e = cell.batch_nodes * (cell.fanout[0] + cell.fanout[0] * cell.fanout[1])
+    elif cell.global_batch:  # batched small graphs, block-diagonal
+        n = cell.n_nodes * cell.global_batch
+        e = cell.n_edges * cell.global_batch
+    else:
+        n, e = cell.n_nodes, cell.n_edges
+    n, e = _pad_to(n, 512), _pad_to(e, 512)
+
+    params = gnn.abstract_params(cfg, cell.d_feat)
+    pspecs = gnn_param_specs(params)
+    opt = adam(1e-4)
+    opt_state = jax.eval_shape(opt.init, params)
+    ospecs = _opt_specs(pspecs)
+    step = gnn.make_train_step(cfg, opt)
+
+    feats = SDS((n, cell.d_feat), jnp.float32)
+    src = SDS((e,), jnp.int32)
+    dst = SDS((e,), jnp.int32)
+    targets = SDS((n, cfg.n_vars), jnp.float32)
+    mask = SDS((n,), jnp.float32)
+    edge_spec = P((dp, "model") if not multi_pod else ("pod", "data", "model"))
+    return CellProgram(
+        arch_id, cell.name, step,
+        (params, opt_state, feats, src, dst, targets, mask),
+        (pspecs, ospecs, P(dp, None), edge_spec, edge_spec, P(dp, None), P(dp)),
+        (pspecs, ospecs, P()),
+        donate_argnums=(0, 1),
+        model_flops=costs.gnn_model_flops(cfg, cell),
+        loop_trips=(cfg.num_layers,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch(cfg, b: int, with_label=True, positives=False):
+    out = {}
+    if cfg.kind == "wide_deep":
+        out["sparse"] = SDS((b, cfg.n_sparse), jnp.int32)
+        out["dense"] = SDS((b, cfg.n_dense), jnp.float32)
+    else:
+        out["hist"] = SDS((b, cfg.seq_len), jnp.int32)
+        if not positives:
+            out["target"] = SDS((b,), jnp.int32)
+    if positives:
+        out["positives"] = SDS((b, 8), jnp.int32)
+    elif with_label:
+        out["label"] = SDS((b,), jnp.float32)
+    return out
+
+
+def _recsys_batch_specs(cfg, dp, with_label=True, positives=False):
+    out = {}
+    if cfg.kind == "wide_deep":
+        out["sparse"] = P(dp, None)
+        out["dense"] = P(dp, None)
+    else:
+        out["hist"] = P(dp, None)
+        if not positives:
+            out["target"] = P(dp)
+    if positives:
+        out["positives"] = P(dp, None)
+    elif with_label:
+        out["label"] = P(dp)
+    return out
+
+
+def _recsys_program(
+    arch_id, mod, cell: ShapeCell, multi_pod: bool, opt: bool = False
+) -> CellProgram:
+    cfg = mod.CONFIG
+    dp = _dp(multi_pod)
+    params = recsys.abstract_params(cfg)
+    pspecs = recsys_param_specs(params)
+    flops = costs.recsys_model_flops(cfg, cell)
+
+    if cell.kind == "train":
+        objective = "fopo" if cfg.kind == "sasrec" else "bce"
+        optimizer = adam(1e-3)
+        opt_state = jax.eval_shape(optimizer.init, params)
+        ospecs = _opt_specs(pspecs)
+        # §Perf variant: distributed MIPS (per-shard top-K + K-merge via
+        # shard_map) instead of the streaming scan over the vocab-sharded
+        # table — the baseline broadcasts every catalog block
+        step = recsys.make_train_step(
+            cfg, optimizer, objective=objective,
+            retriever_mode="sharded" if (opt and objective == "fopo") else "streaming",
+        )
+        use_pos = objective == "fopo"
+        batch = _recsys_batch(cfg, cell.global_batch, positives=use_pos)
+        bspecs = _recsys_batch_specs(cfg, dp, positives=use_pos)
+        key = SDS((2,), jnp.uint32)
+        if cfg.kind == "sasrec":  # streaming top-K scan over the catalog
+            trips = (-(-cfg.item_vocab // 8192),)
+        elif cfg.kind == "dien":  # GRU/AUGRU scans over the history
+            trips = (cfg.seq_len,)
+        else:
+            trips = ()
+        return CellProgram(
+            arch_id, cell.name, step,
+            (params, opt_state, batch, key),
+            (pspecs, ospecs, bspecs, P(None)),
+            (pspecs, ospecs, P()),
+            donate_argnums=(0, 1),
+            model_flops=flops,
+            loop_trips=trips,
+            note=f"objective={objective}",
+        )
+
+    if cell.kind == "serve":
+        batch = _recsys_batch(cfg, cell.global_batch, with_label=False)
+        bspecs = _recsys_batch_specs(cfg, dp, with_label=False)
+
+        def fn(params_, batch_):
+            return recsys.forward(cfg, params_, batch_)
+
+        return CellProgram(
+            arch_id, cell.name, fn,
+            (params, batch),
+            (pspecs, bspecs),
+            P(dp),
+            donate_argnums=(),
+            model_flops=flops,
+            loop_trips=(cfg.seq_len,) if cfg.kind == "dien" else (),
+        )
+
+    if cell.kind == "retrieval":
+        batch = _recsys_batch(cfg, 1, with_label=False)
+        # batch=1: replicate the query, shard the candidates
+        if cfg.kind == "wide_deep":
+            bspecs = {"sparse": P(None, None), "dense": P(None, None)}
+        else:
+            bspecs = {"hist": P(None, None), "target": P(None)}
+        cand_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        # pad the candidate list to the full mesh size (512 covers both
+        # meshes); production fills the tail with repeated ids
+        n_cand = _pad_to(cell.n_candidates, 512)
+        batch["candidates"] = SDS((n_cand,), jnp.int32)
+        bspecs["candidates"] = P(cand_axes)
+
+        def fn(params_, batch_):
+            return recsys.retrieval_topk(cfg, params_, batch_, k=100)
+
+        if cfg.kind in ("sasrec", "dien", "wide_deep"):
+            trips = (-(-cell.n_candidates // 8192),)
+        else:
+            trips = ()
+        return CellProgram(
+            arch_id, cell.name, fn,
+            (params, batch),
+            (pspecs, bspecs),
+            (P(None, None), P(None, None)),
+            donate_argnums=(),
+            model_flops=flops,
+            loop_trips=trips,
+        )
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def build_program(
+    arch_id: str, shape_name: str, *, multi_pod: bool = False, opt: bool = False
+) -> CellProgram:
+    """opt=False -> paper-faithful/baseline program; opt=True -> the §Perf
+    variant (Pallas fused attention, grouped-GQA decode, sharded MIPS)."""
+    mod = get_arch(arch_id)
+    cell = mod.SHAPES[shape_name]
+    if mod.FAMILY == "lm":
+        return _lm_program(arch_id, mod, cell, multi_pod, opt=opt)
+    if mod.FAMILY == "gnn":
+        return _gnn_program(arch_id, mod, cell, multi_pod)
+    if mod.FAMILY == "recsys":
+        return _recsys_program(arch_id, mod, cell, multi_pod, opt=opt)
+    raise ValueError(mod.FAMILY)
+
+
+def input_specs(arch_id: str, shape_name: str, *, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    return build_program(arch_id, shape_name, multi_pod=multi_pod).args
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,139 @@
+"""Training launcher: --arch <id> resolves a pool config and runs its
+training step at smoke scale on the local device (CPU container), or
+prints the production launch plan for the real mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch sasrec --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b --steps 5
+    PYTHONPATH=src python -m repro.launch.train --arch fopo-paper --steps 200
+
+The production path (256/512 chips) reuses the exact same step
+functions through launch/specs.py — the dry-run proves those lower and
+compile on the full meshes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.optim import adam
+
+
+def _train_lm(mod, steps: int) -> None:
+    from repro.models import lm
+
+    cfg = mod.SMOKE_CONFIG
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adam(1e-3)
+    step = jax.jit(lm.make_train_step(cfg, opt))
+    st = opt.init(params)
+    b, s = 4, 32
+    rng = np.random.default_rng(0)
+    for i in range(steps):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)))
+        t0 = time.perf_counter()
+        params, st, loss = step(params, st, toks[:, :-1], toks[:, 1:])
+        jax.block_until_ready(loss)
+        print(f"step {i}: loss={float(loss):.4f} ({(time.perf_counter()-t0)*1e3:.0f} ms)")
+
+
+def _train_gnn(mod, steps: int) -> None:
+    from repro.data import random_graph
+    from repro.models import gnn
+
+    cfg = mod.SMOKE_CONFIG
+    g = random_graph(512, avg_degree=8, seed=0)
+    d_feat = 16
+    params = gnn.init_params(cfg, jax.random.PRNGKey(0), d_feat=d_feat)
+    opt = adam(1e-3)
+    step = jax.jit(gnn.make_train_step(cfg, opt))
+    st = opt.init(params)
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.normal(size=(512, d_feat)), jnp.float32)
+    targets = jnp.asarray(rng.normal(size=(512, cfg.n_vars)), jnp.float32)
+    src = jnp.asarray(g.indices % 512, jnp.int32)
+    dst = jnp.asarray(np.repeat(np.arange(512), np.diff(g.indptr)), jnp.int32)
+    mask = jnp.ones((512,))
+    for i in range(steps):
+        params, st, loss = step(params, st, feats, src, dst, targets, mask)
+        print(f"step {i}: loss={float(loss):.4f}")
+
+
+def _train_recsys(mod, steps: int) -> None:
+    from repro.models import recsys
+
+    cfg = mod.SMOKE_CONFIG
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    objective = "fopo" if cfg.kind == "sasrec" else "bce"
+    opt = adam(1e-3)
+    step = jax.jit(recsys.make_train_step(cfg, opt, objective=objective))
+    st = opt.init(params)
+    rng = np.random.default_rng(0)
+    b = 64
+    for i in range(steps):
+        if cfg.kind == "wide_deep":
+            batch = {
+                "sparse": jnp.asarray(rng.integers(0, 10**6, (b, cfg.n_sparse))),
+                "dense": jnp.asarray(rng.normal(size=(b, cfg.n_dense)), jnp.float32),
+                "label": jnp.asarray(rng.random(b) < 0.3, jnp.float32),
+            }
+        elif objective == "fopo":
+            batch = {
+                "hist": jnp.asarray(rng.integers(-1, cfg.item_vocab, (b, cfg.seq_len))),
+                "positives": jnp.asarray(rng.integers(0, cfg.item_vocab, (b, 4))),
+            }
+        else:
+            batch = {
+                "hist": jnp.asarray(rng.integers(-1, cfg.item_vocab, (b, cfg.seq_len))),
+                "target": jnp.asarray(rng.integers(0, cfg.item_vocab, (b,))),
+                "label": jnp.asarray(rng.random(b) < 0.3, jnp.float32),
+            }
+        params, st, loss = step(params, st, batch, jax.random.PRNGKey(i))
+        print(f"step {i}: loss={float(loss):.5f} [{objective}]")
+
+
+def _train_fopo_paper(mod, steps: int) -> None:
+    from repro.core import FOPOConfig
+    from repro.data import SyntheticConfig, generate_sessions
+    from repro.train import FOPOTrainer, TrainerConfig
+
+    cfg = mod.SMOKE_CONFIG
+    data = generate_sessions(
+        SyntheticConfig(num_items=cfg.num_items, num_users=2000,
+                        embed_dim=cfg.embed_dim, session_len=16)
+    )
+    train_ds, test_ds = data.split(0.9)
+    tr = FOPOTrainer(
+        TrainerConfig(estimator="fopo", fopo=cfg.fopo, batch_size=32,
+                      learning_rate=3e-3, num_steps=steps),
+        train_ds,
+    )
+    print(f"R_test before: {tr.evaluate(test_ds):.4f}")
+    tr.train(steps, log_every=max(1, steps // 5))
+    print(f"R_test after:  {tr.evaluate(test_ds):.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+    mod = get_arch(args.arch)
+    print(f"arch={args.arch} family={mod.FAMILY} (smoke-scale on "
+          f"{jax.devices()[0].platform}; production mesh via launch/dryrun.py)")
+    if mod.FAMILY == "lm":
+        _train_lm(mod, args.steps)
+    elif mod.FAMILY == "gnn":
+        _train_gnn(mod, args.steps)
+    elif mod.FAMILY == "recsys":
+        _train_recsys(mod, args.steps)
+    else:
+        _train_fopo_paper(mod, args.steps)
+
+
+if __name__ == "__main__":
+    main()

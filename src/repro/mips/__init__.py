@@ -1,0 +1,22 @@
+"""MIPS substrate: exact / streaming / IVF / sharded retrievers.
+
+All retrievers share the TopK(scores, indices) result type so the FOPO
+proposal layer is retriever-agnostic.
+"""
+from repro.mips.exact import TopK, topk_exact
+from repro.mips.ivf import IVFIndex, build_ivf, ivf_query, kmeans
+from repro.mips.sharded import make_sharded_topk_fn, sharded_gather_rows, sharded_topk
+from repro.mips.streaming import topk_streaming
+
+__all__ = [
+    "TopK",
+    "topk_exact",
+    "topk_streaming",
+    "IVFIndex",
+    "build_ivf",
+    "ivf_query",
+    "kmeans",
+    "sharded_topk",
+    "make_sharded_topk_fn",
+    "sharded_gather_rows",
+]

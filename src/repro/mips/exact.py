@@ -1,0 +1,28 @@
+"""Exact (dense) maximum-inner-product search: one matmul + lax.top_k.
+
+O(P*L) compute, O(B*P) memory — the correctness oracle for every other
+retriever, and the right choice when P is small enough that the score
+matrix fits.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopK(NamedTuple):
+    scores: jnp.ndarray  # [B, K] descending
+    indices: jnp.ndarray  # [B, K] int32 global item ids
+
+
+def topk_exact(queries: jnp.ndarray, items: jnp.ndarray, k: int) -> TopK:
+    """queries [B, L], items [P, L] -> top-k by inner product."""
+    scores = queries @ items.T  # [B, P]
+    vals, idx = jax.lax.top_k(scores, k)
+    return TopK(scores=vals, indices=idx.astype(jnp.int32))
+
+
+def topk_scores_only(queries: jnp.ndarray, items: jnp.ndarray, k: int) -> jnp.ndarray:
+    return topk_exact(queries, items, k).scores

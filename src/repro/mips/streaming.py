@@ -1,0 +1,62 @@
+"""Streaming blocked top-K MIPS (pure-jnp; Pallas twin in repro.kernels).
+
+Scans the catalog in blocks of `block_items`, carrying a running [B, K]
+top-K. Per block: score the block on the MXU, merge with the carry via
+concat + lax.top_k. O(P*L) FLOPs like the dense path, but O(B*(K+block))
+memory instead of O(B*P) — a single HBM pass over the item matrix. This
+is the flash-attention-style formulation of retrieval and the shape the
+Pallas kernel `repro.kernels.mips_topk` implements natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mips.exact import TopK
+
+NEG_INF = jnp.float32(-3.0e38)
+
+
+def _pad_items(items: jnp.ndarray, block_items: int):
+    p, l = items.shape
+    pad = (-p) % block_items
+    if pad:
+        items = jnp.concatenate([items, jnp.zeros((pad, l), items.dtype)], axis=0)
+    return items, p + pad, pad
+
+
+def topk_streaming(
+    queries: jnp.ndarray, items: jnp.ndarray, k: int, block_items: int = 4096
+) -> TopK:
+    """queries [B, L], items [P, L] -> TopK([B, K])."""
+    b, l = queries.shape
+    p = items.shape[0]
+    items_p, p_pad, pad = _pad_items(items, block_items)
+    n_blocks = p_pad // block_items
+    blocks = items_p.reshape(n_blocks, block_items, l)
+
+    init_scores = jnp.full((b, k), NEG_INF, jnp.float32)
+    init_idx = jnp.full((b, k), -1, jnp.int32)
+
+    def body(carry, inp):
+        best_s, best_i = carry
+        blk_id, blk = inp
+        s = (queries @ blk.T).astype(jnp.float32)  # [B, block]
+        base = blk_id * block_items
+        ids = base + jnp.arange(block_items, dtype=jnp.int32)  # [block]
+        valid = ids < p
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        cat_s = jnp.concatenate([best_s, s], axis=-1)  # [B, K+block]
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids, (b, block_items))], axis=-1
+        )
+        new_s, pos = jax.lax.top_k(cat_s, k)
+        new_i = jnp.take_along_axis(cat_i, pos, axis=-1)
+        return (new_s, new_i), None
+
+    (scores, indices), _ = jax.lax.scan(
+        body,
+        (init_scores, init_idx),
+        (jnp.arange(n_blocks, dtype=jnp.int32), blocks),
+    )
+    return TopK(scores=scores, indices=indices)

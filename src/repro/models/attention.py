@@ -1,0 +1,184 @@
+"""Attention: flash-style chunked prefill/train + cached decode.
+
+The jnp flash formulation (scan over KV blocks with online softmax,
+outer scan over Q chunks) keeps the [S, S] score matrix out of HBM —
+mandatory at the 32k prefill shapes and the remat-friendly form XLA
+pipelines well on TPU. Sliding-window (local) layers and Gemma-2 logit
+soft-caps are handled inside the same kernel via masks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap
+
+NEG_INF = -2.0e38
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """[B, S, KV, Dh] -> [B, S, KV*n_rep, Dh] (GQA head sharing)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kv, n_rep, dh)
+    ).reshape(b, s, kv * n_rep, dh)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, Sq, H, Dh]
+    k: jnp.ndarray,  # [B, Skv, KV, Dh]
+    v: jnp.ndarray,  # [B, Skv, KV, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,  # absolute position of q[0] (prefill chunking / decode)
+    window: int | None = None,  # sliding-window size (None = global)
+    logit_cap: float | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    b, sq, h, dh = q.shape
+    skv, kv_heads = k.shape[1], k.shape[2]
+    n_rep = h // kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nkv = -(-skv // kv_chunk)
+    # pad to chunk multiples
+    q = _pad_seq(q, nq * q_chunk)
+    k = _pad_seq(k, nkv * kv_chunk)
+    v = _pad_seq(v, nkv * kv_chunk)
+
+    qpos = q_offset + jnp.arange(nq * q_chunk)
+    kpos = jnp.arange(nkv * kv_chunk)
+    kvalid = kpos < skv
+
+    qc = q.reshape(b, nq, q_chunk, h, dh).transpose(1, 0, 3, 2, 4)  # [nq,B,H,qc,Dh]
+    kc = k.reshape(b, nkv, kv_chunk, h, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nkv, kv_chunk, h, dh).transpose(1, 0, 3, 2, 4)
+    qpos_c = qpos.reshape(nq, q_chunk)
+    kpos_c = kpos.reshape(nkv, kv_chunk)
+    kvalid_c = kvalid.reshape(nkv, kv_chunk)
+
+    def q_body(qi):
+        qq = qc[qi] * scale  # [B,H,qc,Dh]
+        qp = qpos_c[qi]  # [qc]
+
+        def kv_body(carry, kvi):
+            acc, m, l = carry
+            kk, vv = kc[kvi], vc[kvi]  # [B,H,kc,Dh]
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", qq.astype(jnp.float32), kk.astype(jnp.float32)
+            )
+            s = softcap(s, logit_cap)
+            kp = kpos_c[kvi]
+            mask = kvalid_c[kvi][None, :]
+            if causal:
+                mask = mask & (kp[None, :] <= qp[:, None])
+            if window is not None:
+                mask = mask & (qp[:, None] - kp[None, :] < window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, q_chunk, dh), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0), jnp.arange(nkv)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # [B,H,qc,Dh]
+
+    out = jax.lax.map(q_body, jnp.arange(nq))  # [nq,B,H,qc,Dh]
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_chunk, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _pad_seq(x: jnp.ndarray, to: int) -> jnp.ndarray:
+    pad = to - x.shape[1]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, Dh]
+    k_cache: jnp.ndarray,  # [B, S, KV, Dh]
+    v_cache: jnp.ndarray,  # [B, S, KV, Dh]
+    cache_len: jnp.ndarray | int,  # valid prefix length (scalar)
+    *,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    gqa_einsum: bool = False,
+    slice_window: bool = False,
+) -> jnp.ndarray:
+    """Single-token attention against the full cache (one [B,H,S] row —
+    linear in S, the memory-bound decode shape).
+
+    gqa_einsum=True (§Perf variant): grouped einsum keeps the KV cache in
+    its native [B, S, KV, Dh] layout — no head-repeat broadcast. The
+    baseline repeat forces SPMD to re-shard (involuntary full
+    rematerialisation of a sequence-sharded cache on the long_500k cell);
+    the grouped form contracts against the cache in place, so a
+    seq-sharded cache only exchanges the [B, H, S] logit row partials."""
+    b, _, h, dh = q.shape
+    s, kv_heads = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    if slice_window and gqa_einsum and window is not None and window < s:
+        # sliding-window layers only ever see the last `window` entries:
+        # slice the cache (static size) so the contraction — and the HBM
+        # read — is O(window), not O(S). Opt-in (pair_scan §Perf): the
+        # dynamic slice REGRESSES on a sequence-sharded cache (cross-shard
+        # gather), so the caller decides.
+        start = jnp.clip(
+            jnp.asarray(cache_len, jnp.int32) - window, 0, s - window
+        )
+        k_cache = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
+        v_cache = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
+        s = window
+        pos = start + jnp.arange(s)
+    else:
+        pos = jnp.arange(s)
+    mask = pos[None, None, :] < cache_len  # [1,1,S]
+    if window is not None:
+        mask = mask & (pos[None, None, :] >= cache_len - window)
+
+    if gqa_einsum:
+        qg = (q * scale).reshape(b, kv_heads, n_rep, dh)  # [B,KV,rep,Dh]
+        logits = jnp.einsum(
+            "bkrd,bskd->bkrs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+        )  # [B,KV,rep,S]
+        logits = softcap(logits, logit_cap)
+        logits = jnp.where(mask[:, :, None, :], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkrs,bskd->bkrd", p, v_cache.astype(jnp.float32))
+        return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+    kk = _repeat_kv(k_cache, n_rep)
+    vv = _repeat_kv(v_cache, n_rep)
+    logits = jnp.einsum(
+        "bohd,bshd->bhs", (q * scale).astype(jnp.float32), kk.astype(jnp.float32)
+    )
+    logits = softcap(logits, logit_cap)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vv.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)  # [B,1,H,Dh]

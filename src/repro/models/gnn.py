@@ -1,0 +1,131 @@
+"""GraphCast-style encode-process-decode message-passing GNN.
+
+Message passing is built on the JAX-native sparse primitive —
+edge-indexed gather + jax.ops.segment_sum scatter (DESIGN.md: BCOO-only
+JAX means the edge-list formulation IS the system, not a fallback).
+
+  encoder:   node MLP  d_feat -> d_hidden
+  processor: num_layers rounds of
+               m_e  = MLP([h_src, h_dst])           (edge update)
+               h_v' = h_v + MLP([h_v, agg_e->v m_e]) (node update, residual)
+  decoder:   node MLP  d_hidden -> n_vars (regression; GraphCast's 227
+             surface/atmo variables)
+
+The icosahedral multi-mesh of GraphCast (mesh_refinement=6) is an input
+graph, not an architectural feature — the four assigned shape cells each
+provide their own graph (full small, sampled minibatch, full 2.4M-node,
+batched molecules), so the model is graph-agnostic; edges arrive as
+padded (src, dst) int arrays (-1 = padding).
+
+Sharding: node features P("data", None), edge arrays P(("data","model"))
+— edge-parallel message computation with a segment-sum reduction onto
+node shards (partial sums + psum inserted by SPMD).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs_base import GNNConfig
+from repro.models.layers import mlp_apply, mlp_init
+
+
+def init_params(cfg: GNNConfig, key: jax.Array, d_feat: int | None = None) -> Any:
+    d_in = d_feat or cfg.d_feat
+    dh = cfg.d_hidden
+    n = cfg.num_layers
+    keys = jax.random.split(key, 4 + 2 * n)
+    params = {
+        "encoder": mlp_init(keys[0], (d_in, dh, dh)),
+        "decoder": mlp_init(keys[1], (dh, dh, cfg.n_vars)),
+    }
+    edge_mlps, node_mlps = [], []
+    for i in range(n):
+        edge_mlps.append(mlp_init(keys[2 + 2 * i], (2 * dh, dh, dh)))
+        node_mlps.append(mlp_init(keys[3 + 2 * i], (2 * dh, dh, dh)))
+    # stack for scan: list[list[dict]] -> pytree with leading layer dim
+    params["edge_mlps"] = jax.tree.map(lambda *xs: jnp.stack(xs), *edge_mlps)
+    params["node_mlps"] = jax.tree.map(lambda *xs: jnp.stack(xs), *node_mlps)
+    return params
+
+
+def abstract_params(cfg: GNNConfig, d_feat: int) -> Any:
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, d_feat), jax.random.PRNGKey(0)
+    )
+
+
+def forward(
+    cfg: GNNConfig,
+    params: Any,
+    node_feats: jnp.ndarray,  # [N, d_feat]
+    edge_src: jnp.ndarray,  # [E] int32, -1 pad
+    edge_dst: jnp.ndarray,  # [E] int32, -1 pad
+) -> jnp.ndarray:
+    n = node_feats.shape[0]
+    valid = (edge_src >= 0) & (edge_dst >= 0)
+    src = jnp.maximum(edge_src, 0)
+    dst = jnp.maximum(edge_dst, 0)
+
+    h = mlp_apply(params["encoder"], node_feats, act=jax.nn.relu)  # [N, dh]
+
+    def layer(h_, mlps):
+        edge_mlp, node_mlp = mlps
+        m_in = jnp.concatenate(
+            [jnp.take(h_, src, axis=0), jnp.take(h_, dst, axis=0)], axis=-1
+        )  # [E, 2dh]
+        m = mlp_apply(edge_mlp, m_in, act=jax.nn.relu)  # [E, dh]
+        m = jnp.where(valid[:, None], m, 0.0)
+        if cfg.aggregator == "sum":
+            agg = jax.ops.segment_sum(m, dst, n)
+        elif cfg.aggregator == "mean":
+            s = jax.ops.segment_sum(m, dst, n)
+            c = jax.ops.segment_sum(valid.astype(m.dtype), dst, n)
+            agg = s / jnp.maximum(c[:, None], 1.0)
+        elif cfg.aggregator == "max":
+            agg = jax.ops.segment_max(
+                jnp.where(valid[:, None], m, -jnp.inf), dst, n
+            )
+            agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+        else:
+            raise ValueError(cfg.aggregator)
+        upd = mlp_apply(
+            node_mlp, jnp.concatenate([h_, agg], axis=-1), act=jax.nn.relu
+        )
+        return h_ + upd, None
+
+    if cfg.scan_layers:
+        body = layer
+        if cfg.remat:
+            body = jax.checkpoint(layer)
+        h, _ = jax.lax.scan(
+            body, h, (params["edge_mlps"], params["node_mlps"])
+        )
+    else:
+        for i in range(cfg.num_layers):
+            mlps = jax.tree.map(lambda p: p[i], (params["edge_mlps"], params["node_mlps"]))
+            h, _ = layer(h, mlps)
+
+    return mlp_apply(params["decoder"], h, act=jax.nn.relu)  # [N, n_vars]
+
+
+def loss_fn(cfg, params, node_feats, edge_src, edge_dst, targets, node_mask=None):
+    pred = forward(cfg, params, node_feats, edge_src, edge_dst)
+    err = jnp.square(pred - targets)
+    if node_mask is not None:
+        err = err * node_mask[:, None]
+        return jnp.sum(err) / jnp.maximum(jnp.sum(node_mask) * cfg.n_vars, 1.0)
+    return jnp.mean(err)
+
+
+def make_train_step(cfg: GNNConfig, optimizer):
+    def train_step(params, opt_state, node_feats, edge_src, edge_dst, targets, node_mask):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, node_feats, edge_src, edge_dst, targets, node_mask)
+        )(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step

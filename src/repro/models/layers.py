@@ -1,0 +1,66 @@
+"""Shared neural layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [..., S, H, Dh]; positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def gated_mlp(x: jnp.ndarray, w_gate, w_up, w_down, act: str = "silu") -> jnp.ndarray:
+    g = x @ w_gate
+    u = x @ w_up
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (a * u) @ w_down
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    s = scale if scale is not None else 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def mlp_apply(params: list[dict], x: jnp.ndarray, act=jax.nn.relu, final_act=None):
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            h = act(h)
+        elif final_act is not None:
+            h = final_act(h)
+    return h
+
+
+def mlp_init(key, dims: tuple[int, ...], dtype=jnp.float32) -> list[dict]:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": dense_init(k, di, do, dtype),
+            "b": jnp.zeros((do,), dtype),
+        }
+        for k, di, do in zip(keys, dims[:-1], dims[1:])
+    ]

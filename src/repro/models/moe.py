@@ -1,0 +1,77 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bucketed scatter
+dispatch, batched expert matmuls, gather combine.
+
+TPU adaptation notes (DESIGN.md §3/§4): the GPU-canonical MoE path
+(grouped GEMM over ragged token groups, MegaBlocks) has no ragged-GEMM
+analogue on the MXU; the TPU-native layout is a dense [E, C, d] capacity
+buffer so every expert matmul is a fixed-shape batched GEMM. Dispatch is
+a differentiable scatter-add (grad = gather), combine a gather. Token
+overflow beyond capacity is dropped (standard GShard semantics) and
+counted in aux for the load-balancing loss.
+
+Sharding: buffer [E, C, d] -> P("model", "data", None) — experts over
+the TP axis (EP), capacity rows over the FSDP axis; expert weights
+[E, d, f] -> P("model", "data", None). XLA SPMD inserts the dispatch
+all-to-all across `model` and the capacity all-gathers across `data`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # [T, d] flattened tokens
+    router_w: jnp.ndarray,  # [d, E]
+    we_gate: jnp.ndarray,  # [E, d, f]
+    we_up: jnp.ndarray,  # [E, d, f]
+    we_down: jnp.ndarray,  # [E, f, d]
+    *,
+    num_experts_per_tok: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> tuple[jnp.ndarray, dict]:
+    t, d = x.shape
+    e = router_w.shape[-1]
+    k = num_experts_per_tok
+    capacity = max(1, int(t * k * capacity_factor / e))
+
+    logits = (x.astype(jnp.float32)) @ router_w.astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise
+
+    flat_e = top_e.reshape(-1)  # [T*k]
+    # rank of each assignment within its expert (cumsum over one-hot)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # [T*k, E]
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=-1)  # [T*k]
+    keep = pos < capacity
+    safe_pos = jnp.minimum(pos, capacity - 1)
+
+    src = jnp.repeat(x, k, axis=0)  # [T*k, d] (token per assignment)
+    src = jnp.where(keep[:, None], src, 0.0)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(src)  # scatter dispatch
+
+    def ffn(b_, g, u, dn):
+        h_g = jnp.einsum("ecd,edf->ecf", b_, g)
+        h_u = jnp.einsum("ecd,edf->ecf", b_, u)
+        a = jax.nn.silu(h_g) if act == "silu" else jax.nn.gelu(h_g)
+        return jnp.einsum("ecf,efd->ecd", a * h_u, dn)
+
+    out_buf = ffn(buf, we_gate, we_up, we_down)  # [E, C, d]
+
+    gathered = out_buf[flat_e, safe_pos]  # [T*k, d] combine gather
+    gathered = gathered * (keep[:, None] * top_p.reshape(-1)[:, None]).astype(
+        gathered.dtype
+    )
+    out = jnp.sum(gathered.reshape(t, k, d), axis=1)
+
+    # load-balancing aux (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)  # [E] mean router prob
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0
+    )  # [E] fraction routed
+    aux_loss = e * jnp.sum(me * ce)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out, {"aux_loss": aux_loss, "dropped_frac": dropped}

@@ -1,0 +1,421 @@
+"""Recsys ranking/retrieval models: DIN, DIEN, SASRec, Wide&Deep.
+
+All four sit on the embedding substrate (repro.embeddings) with the
+item table row-sharded over `model` at production vocab (10^6 rows).
+The FOPO technique (the paper) plugs in as the *training objective* for
+the catalog-softmax models (SASRec policy head) — DESIGN.md §5 — and as
+the *retrieval serving path* (`retrieval_cand` cells run MIPS over the
+million-item catalog, the paper's Eq. 5).
+
+Each model exposes:
+  init_params(cfg, key)           — real init (smokes)
+  forward(cfg, params, batch)     — ranking logits [B]
+  make_train_step(cfg, optimizer) — BCE (din/dien/wide_deep), FOPO (sasrec)
+  retrieval_scores / retrieval_topk — candidate scoring for retrieval cells
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.embeddings.bag import embedding_bag_padded
+from repro.models.configs_base import RecsysConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _item_table(cfg: RecsysConfig, key) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.embed_dim, jnp.float32))
+    return jax.random.normal(key, (cfg.item_vocab, cfg.embed_dim)) * scale
+
+
+def _hist_embed(table, hist):
+    """[B, T] padded ids -> ([B, T, D], [B, T] mask)."""
+    mask = hist >= 0
+    emb = jnp.take(table, jnp.maximum(hist, 0), axis=0)
+    return emb * mask[..., None], mask
+
+
+# ---------------------------------------------------------------------------
+# DIN — Deep Interest Network (target attention)
+# ---------------------------------------------------------------------------
+
+def din_init(cfg: RecsysConfig, key) -> Any:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "items": _item_table(cfg, k1),
+        "attn_mlp": mlp_init(k2, (4 * d,) + cfg.attn_mlp_dims + (1,)),
+        "mlp": mlp_init(k3, (2 * d,) + cfg.mlp_dims + (1,)),
+    }
+
+
+def _din_attention(params, hist_emb, mask, tgt_emb):
+    """hist [B,T,D], tgt [B,D] (or [B,C,D] broadcast) -> interest [B,D]."""
+    t = hist_emb.shape[-2]
+    tgt = jnp.broadcast_to(tgt_emb[..., None, :], hist_emb.shape)
+    feat = jnp.concatenate(
+        [hist_emb, tgt, hist_emb - tgt, hist_emb * tgt], axis=-1
+    )  # [..., T, 4D]
+    scores = mlp_apply(params["attn_mlp"], feat, act=jax.nn.sigmoid)[..., 0]
+    scores = jnp.where(mask, scores, 0.0)  # DIN: no softmax, masked weights
+    return jnp.einsum("...t,...td->...d", scores, hist_emb)
+
+
+def din_forward(cfg: RecsysConfig, params, hist, target) -> jnp.ndarray:
+    hist_emb, mask = _hist_embed(params["items"], hist)
+    tgt_emb = jnp.take(params["items"], target, axis=0)
+    interest = _din_attention(params, hist_emb, mask, tgt_emb)
+    x = jnp.concatenate([interest, tgt_emb], axis=-1)
+    return mlp_apply(params["mlp"], x, act=jax.nn.relu)[..., 0]  # [B]
+
+
+def din_retrieval_scores(cfg, params, hist, candidates) -> jnp.ndarray:
+    """hist [1, T]; candidates [C] -> scores [C]. Target attention is
+    recomputed per candidate (DIN's retrieval cost), candidate-sharded."""
+    hist_emb, mask = _hist_embed(params["items"], hist)  # [1,T,D]
+    cand_emb = jnp.take(params["items"], candidates, axis=0)  # [C, D]
+    interest = _din_attention(
+        params, jnp.broadcast_to(hist_emb, (candidates.shape[0],) + hist_emb.shape[1:]),
+        jnp.broadcast_to(mask, (candidates.shape[0],) + mask.shape[1:]),
+        cand_emb,
+    )  # [C, D]
+    x = jnp.concatenate([interest, cand_emb], axis=-1)
+    return mlp_apply(params["mlp"], x, act=jax.nn.relu)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# DIEN — interest evolution: GRU + attentional AUGRU
+# ---------------------------------------------------------------------------
+
+def _gru_init(key, d_in, d_h):
+    k = jax.random.split(key, 3)
+    return {
+        "wz": dense_init(k[0], d_in + d_h, d_h),
+        "wr": dense_init(k[1], d_in + d_h, d_h),
+        "wh": dense_init(k[2], d_in + d_h, d_h),
+        "bz": jnp.zeros((d_h,)),
+        "br": jnp.zeros((d_h,)),
+        "bh": jnp.zeros((d_h,)),
+    }
+
+
+def _gru_cell(p, h, x, a=None):
+    """Standard GRU; if attention score `a` is given, AUGRU (a scales z)."""
+    hx = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(hx @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(hx @ p["wr"] + p["br"])
+    hc = jnp.tanh(jnp.concatenate([x, r * h], axis=-1) @ p["wh"] + p["bh"])
+    if a is not None:
+        z = z * a[..., None]
+    return (1 - z) * h + z * hc
+
+
+def dien_init(cfg: RecsysConfig, key) -> Any:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, g = cfg.embed_dim, cfg.gru_dim
+    return {
+        "items": _item_table(cfg, k1),
+        "gru1": _gru_init(k2, d, g),
+        "augru": _gru_init(k3, g, g),
+        "attn_w": dense_init(k4, g, d),
+        "mlp": mlp_init(k5, (g + d,) + cfg.mlp_dims + (1,)),
+    }
+
+
+def _dien_interest(cfg, params, hist, target_emb):
+    """Returns final AUGRU state [B, g]."""
+    hist_emb, mask = _hist_embed(params["items"], hist)  # [B,T,D]
+    b, t, d = hist_emb.shape
+    g = cfg.gru_dim
+
+    def step1(h, inp):
+        x, m = inp
+        h_new = _gru_cell(params["gru1"], h, x)
+        h = jnp.where(m[:, None], h_new, h)
+        return h, h
+
+    xs = (hist_emb.transpose(1, 0, 2), mask.T)
+    _, states = jax.lax.scan(step1, jnp.zeros((b, g)), xs)  # [T,B,g]
+
+    # attention of each interest state vs the target embedding
+    att_logits = jnp.einsum("tbg,gd,bd->tb", states, params["attn_w"], target_emb)
+    att_logits = jnp.where(mask.T, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits, axis=0)  # over T
+
+    def step2(h, inp):
+        x, m, a = inp
+        h_new = _gru_cell(params["augru"], h, x, a)
+        h = jnp.where(m[:, None], h_new, h)
+        return h, None
+
+    final, _ = jax.lax.scan(step2, jnp.zeros((b, g)), (states, mask.T, att))
+    return final  # [B, g]
+
+
+def dien_forward(cfg: RecsysConfig, params, hist, target) -> jnp.ndarray:
+    tgt_emb = jnp.take(params["items"], target, axis=0)
+    interest = _dien_interest(cfg, params, hist, tgt_emb)
+    x = jnp.concatenate([interest, tgt_emb], axis=-1)
+    return mlp_apply(params["mlp"], x, act=jax.nn.relu)[..., 0]
+
+
+def dien_user_vector(cfg, params, hist) -> jnp.ndarray:
+    """Target-independent first-stage state for MIPS retrieval: the GRU
+    final state projected into item space (AUGRU needs the target, so
+    retrieval uses stage-1 interest — standard two-stage practice)."""
+    hist_emb, mask = _hist_embed(params["items"], hist)
+    b, t, d = hist_emb.shape
+
+    def step1(h, inp):
+        x, m = inp
+        h_new = _gru_cell(params["gru1"], h, x)
+        return jnp.where(m[:, None], h_new, h), None
+
+    final, _ = jax.lax.scan(
+        step1, jnp.zeros((b, cfg.gru_dim)), (hist_emb.transpose(1, 0, 2), mask.T)
+    )
+    return final @ params["attn_w"]  # [B, D] in item-embedding space
+
+
+# ---------------------------------------------------------------------------
+# SASRec — self-attentive sequential recommendation
+# ---------------------------------------------------------------------------
+
+def sasrec_init(cfg: RecsysConfig, key) -> Any:
+    d = cfg.embed_dim
+    keys = jax.random.split(key, 2 + 4 * cfg.num_blocks)
+    params = {
+        "items": _item_table(cfg, keys[0]),
+        "pos": jax.random.normal(keys[1], (cfg.seq_len, d)) * 0.02,
+        "blocks": [],
+    }
+    for i in range(cfg.num_blocks):
+        k = keys[2 + 4 * i : 6 + 4 * i]
+        params["blocks"].append(
+            {
+                "wq": dense_init(k[0], d, d),
+                "wk": dense_init(k[1], d, d),
+                "wv": dense_init(k[2], d, d),
+                "ffn": mlp_init(k[3], (d, d, d)),
+                "ln1": jnp.zeros((d,)),
+                "ln2": jnp.zeros((d,)),
+            }
+        )
+    return params
+
+
+def sasrec_user_vector(cfg: RecsysConfig, params, hist) -> jnp.ndarray:
+    """hist [B, T] -> final hidden state [B, D] (the MIPS query h(x))."""
+    from repro.models.layers import rms_norm
+
+    emb, mask = _hist_embed(params["items"], hist)  # [B,T,D]
+    b, t, d = emb.shape
+    h = emb + params["pos"][None, :t]
+    nh = cfg.num_heads
+    dh = d // nh
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    for blk in params["blocks"]:
+        y = rms_norm(h, blk["ln1"])
+        q = (y @ blk["wq"]).reshape(b, t, nh, dh)
+        k_ = (y @ blk["wk"]).reshape(b, t, nh, dh)
+        v = (y @ blk["wv"]).reshape(b, t, nh, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k_) / jnp.sqrt(float(dh))
+        m = causal[None, None] & mask[:, None, None, :]
+        s = jnp.where(m, s, -1e30)
+        att = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, d)
+        h = h + o
+        h = h + mlp_apply(blk["ffn"], rms_norm(h, blk["ln2"]), act=jax.nn.relu)
+    # last valid position
+    last = jnp.maximum(jnp.sum(mask.astype(jnp.int32), axis=1) - 1, 0)  # [B]
+    return jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]  # [B,D]
+
+
+def sasrec_forward(cfg: RecsysConfig, params, hist, target) -> jnp.ndarray:
+    u = sasrec_user_vector(cfg, params, hist)
+    tgt = jnp.take(params["items"], target, axis=0)
+    return jnp.sum(u * tgt, axis=-1)  # [B] dot-product score
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep
+# ---------------------------------------------------------------------------
+
+def wide_deep_init(cfg: RecsysConfig, key) -> Any:
+    keys = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    return {
+        # one shared hashed table across fields (quotient-remainder-style
+        # memory bound); per-field offset disambiguates
+        "embed": jax.random.normal(keys[0], (cfg.field_vocab * 4, d)) * scale,
+        "wide": jax.random.normal(keys[1], (cfg.field_vocab * 4, 1)) * 0.01,
+        "dense_wide": dense_init(keys[2], cfg.n_dense, 1),
+        "deep": mlp_init(
+            keys[3], (cfg.n_sparse * d + cfg.n_dense,) + cfg.mlp_dims + (1,)
+        ),
+    }
+
+
+def _wd_flat_ids(cfg: RecsysConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """[B, F] per-field ids -> hashed ids into the shared table."""
+    from repro.embeddings.bag import hash_bucket
+
+    f = sparse_ids.shape[-1]
+    salted = sparse_ids.astype(jnp.uint32) + (
+        jnp.arange(f, dtype=jnp.uint32)[None, :] * jnp.uint32(0x1000193)
+    )
+    return hash_bucket(salted, cfg.field_vocab * 4)
+
+
+def wide_deep_forward(cfg: RecsysConfig, params, sparse_ids, dense_feats) -> jnp.ndarray:
+    b, f = sparse_ids.shape
+    ids = _wd_flat_ids(cfg, sparse_ids)  # [B, F]
+    emb = jnp.take(params["embed"], ids, axis=0)  # [B, F, D]
+    wide = jnp.take(params["wide"], ids, axis=0)[..., 0].sum(axis=-1)  # [B]
+    wide = wide + (dense_feats @ params["dense_wide"])[:, 0]
+    deep_in = jnp.concatenate([emb.reshape(b, -1), dense_feats], axis=-1)
+    deep = mlp_apply(params["deep"], deep_in, act=jax.nn.relu)[..., 0]
+    return wide + deep
+
+
+# ---------------------------------------------------------------------------
+# uniform front-end
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: RecsysConfig, key) -> Any:
+    return {
+        "din": din_init,
+        "dien": dien_init,
+        "sasrec": sasrec_init,
+        "wide_deep": wide_deep_init,
+    }[cfg.kind](cfg, key)
+
+
+def abstract_params(cfg: RecsysConfig) -> Any:
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def forward(cfg: RecsysConfig, params, batch: dict) -> jnp.ndarray:
+    if cfg.kind == "din":
+        return din_forward(cfg, params, batch["hist"], batch["target"])
+    if cfg.kind == "dien":
+        return dien_forward(cfg, params, batch["hist"], batch["target"])
+    if cfg.kind == "sasrec":
+        return sasrec_forward(cfg, params, batch["hist"], batch["target"])
+    if cfg.kind == "wide_deep":
+        return wide_deep_forward(cfg, params, batch["sparse"], batch["dense"])
+    raise ValueError(cfg.kind)
+
+
+def bce_loss(cfg, params, batch) -> jnp.ndarray:
+    logits = forward(cfg, params, batch)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def make_train_step(
+    cfg: RecsysConfig, optimizer, objective: str = "bce",
+    retriever_mode: str = "streaming",
+):
+    """objective: "bce" (pointwise ranking) or "fopo" (the paper: policy
+    learning over the catalog — sasrec/dien user vectors as h_theta(x)).
+    retriever_mode: "streaming" (baseline scan over the sharded table) or
+    "sharded" (§Perf: shard_map per-shard top-K + K-merge on the ambient
+    mesh — multi-device only)."""
+
+    if objective == "fopo":
+        from repro.core.fopo import FOPOConfig, fopo_loss, make_retriever
+        from repro.core.policy import SoftmaxPolicy
+        from repro.core.rewards import make_session_reward
+
+        fcfg = FOPOConfig(
+            num_items=cfg.item_vocab,
+            num_samples=cfg.fopo_num_samples,
+            top_k=cfg.fopo_top_k,
+            epsilon=cfg.fopo_epsilon,
+            retriever="streaming",
+        )
+        if retriever_mode == "sharded":
+            from repro.mips.sharded import context_sharded_topk
+
+            def retriever(h, beta):
+                return context_sharded_topk(h, beta, fcfg.top_k)
+        else:
+            retriever = make_retriever(fcfg, block_items=8192)
+
+        def user_tower(params, hist):
+            if cfg.kind == "sasrec":
+                return sasrec_user_vector(cfg, params, hist)
+            if cfg.kind == "dien":
+                return dien_user_vector(cfg, params, hist)
+            raise ValueError(f"fopo objective unsupported for {cfg.kind}")
+
+        def train_step(params, opt_state, batch, key):
+            def loss(p):
+                policy = SoftmaxPolicy(
+                    tower=lambda pp, x: user_tower(pp, x), item_dim=cfg.embed_dim
+                )
+                reward_fn = make_session_reward(batch["positives"])
+                # Assumption 1: the item table is the fixed beta
+                beta = jax.lax.stop_gradient(p["items"])
+                l, aux = fopo_loss(
+                    policy, p, key, batch["hist"], beta, reward_fn, fcfg, retriever
+                )
+                return l
+
+            l, grads = jax.value_and_grad(loss)(params)
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, l
+
+        return train_step
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads = jax.value_and_grad(lambda p: bce_loss(cfg, p, batch))(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def retrieval_topk(cfg: RecsysConfig, params, batch: dict, k: int = 100):
+    """retrieval_cand cell: one query vs n_candidates (Eq. 5 via MIPS)."""
+    from repro.mips.streaming import topk_streaming
+
+    cands = batch["candidates"]  # [C]
+    if cfg.kind == "din":
+        scores = din_retrieval_scores(cfg, params, batch["hist"], cands)
+        vals, idx = jax.lax.top_k(scores[None, :], k)
+        return vals, jnp.take(cands, idx[0])[None]
+    if cfg.kind in ("sasrec", "dien"):
+        u = (
+            sasrec_user_vector(cfg, params, batch["hist"])
+            if cfg.kind == "sasrec"
+            else dien_user_vector(cfg, params, batch["hist"])
+        )  # [1, D]
+        cand_emb = jnp.take(params["items"], cands, axis=0)  # [C, D]
+        out = topk_streaming(u, cand_emb, k, block_items=8192)
+        return out.scores, jnp.take(cands, out.indices[0])[None]
+    if cfg.kind == "wide_deep":
+        # two-tower factorisation: user tower over non-item fields,
+        # item tower = shared embedding rows of the candidates
+        u_sparse, dense = batch["sparse"], batch["dense"]
+        ids = _wd_flat_ids(cfg, u_sparse)
+        emb = jnp.take(params["embed"], ids, axis=0).reshape(u_sparse.shape[0], -1)
+        deep_in = jnp.concatenate([emb, dense], axis=-1)
+        # reuse the first deep layer as the user projection to embed_dim
+        w = params["deep"][0]["w"][:, : cfg.embed_dim]
+        u = deep_in @ w  # [1, D]
+        cand_ids = _wd_flat_ids(cfg, cands[:, None])[:, 0]
+        cand_emb = jnp.take(params["embed"], cand_ids, axis=0)
+        out = topk_streaming(u, cand_emb, k, block_items=8192)
+        return out.scores, jnp.take(cands, out.indices[0])[None]
+    raise ValueError(cfg.kind)

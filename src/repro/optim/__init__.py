@@ -1,0 +1,27 @@
+from repro.optim.compression import (
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    sgd,
+)
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "sgd",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+]

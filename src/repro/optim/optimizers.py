@@ -1,0 +1,124 @@
+"""First-order optimizers as pure (init, update) pairs over pytrees.
+
+No optax in this environment, so we ship the standard set: SGD(+momentum),
+Adam, AdamW, plus composable gradient transforms (global-norm clipping,
+lr schedules). State is a plain pytree of arrays — checkpoints and
+pjit shardings treat it like params (same PartitionSpec tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Grads, Any, Params], tuple[Params, Any]]
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# transforms
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads: Grads, max_norm: float) -> Grads:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            new_p = jax.tree.map(lambda p, m: p - lr_t * m, params, mu)
+            return new_p, {"step": step, "mu": mu}
+        new_p = jax.tree.map(lambda p, g: p - lr_t * g, params, grads)
+        return new_p, {"step": step, "mu": None}
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(
+    lr: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moments_dtype: str | None = None,
+) -> Optimizer:
+    """Adam; weight_decay > 0 gives AdamW (decoupled). moments_dtype
+    overrides m/v storage (bf16 moments for the giant archs — DESIGN §4)."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def _zeros(p):
+        dt = jnp.dtype(moments_dtype) if moments_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(_zeros, params),
+            "v": jax.tree.map(_zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        t = step.astype(jnp.float32)
+        mhat_scale = 1.0 / (1.0 - b1**t)
+        vhat_scale = 1.0 / (1.0 - b2**t)
+
+        def upd(p, m_, v_):
+            u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return p - lr_t * u
+
+        new_p = jax.tree.map(upd, params, m, v)
+        return new_p, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr: float | Callable = 1e-3, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr=lr, weight_decay=weight_decay, **kw)

@@ -1,0 +1,16 @@
+from repro.train.checkpoint import (
+    latest_checkpoint,
+    list_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.trainer import FOPOTrainer, TrainerConfig
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_checkpoint",
+    "list_checkpoints",
+    "FOPOTrainer",
+    "TrainerConfig",
+]

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run is the ONLY place that forces 512
+# host devices — see src/repro/launch/dryrun.py). Keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

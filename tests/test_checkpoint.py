@@ -1,0 +1,94 @@
+"""Fault tolerance: atomic checkpoints, rotation, restart semantics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (
+    latest_checkpoint,
+    list_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _state(seed):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)), "b": jnp.zeros((8,))},
+        "opt": {"step": jnp.asarray(seed, jnp.int32), "m": jnp.ones((8, 8))},
+    }
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    st = _state(3)
+    save_checkpoint(d, 100, st)
+    step, restored, extra = restore_checkpoint(d, st)
+    assert step == 100
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_rotation_keeps_last_n(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        save_checkpoint(d, s * 10, _state(s), keep=3)
+    assert list_checkpoints(d) == [30, 40, 50]
+    assert latest_checkpoint(d) == 50
+
+
+def test_extra_payload_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 7, _state(0), extra={"loader": {"epoch": 2, "position": 5, "seed": 0}})
+    _, _, extra = restore_checkpoint(d, _state(0))
+    assert extra["loader"] == {"epoch": 2, "position": 5, "seed": 0}
+
+
+def test_restore_validates_structure(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _state(0))
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"just_one_leaf": jnp.zeros(3)})
+
+
+def test_no_partial_checkpoint_on_failure(tmp_path):
+    """Temp-dir write + rename: no step dir without a manifest."""
+    d = str(tmp_path)
+    save_checkpoint(d, 5, _state(1))
+    for name in os.listdir(d):
+        assert not name.startswith(".ckpt_tmp_")
+        if name.startswith("step_"):
+            assert os.path.exists(os.path.join(d, name, "manifest.json"))
+
+
+def test_trainer_restart_resumes(tmp_path):
+    """Kill-and-restart: a new trainer picks up step, params and loader
+    position from the checkpoint directory."""
+    from repro.core import FOPOConfig
+    from repro.data import SyntheticConfig, generate_sessions
+    from repro.train import FOPOTrainer, TrainerConfig
+
+    ds = generate_sessions(SyntheticConfig(num_items=400, num_users=300, embed_dim=12, session_len=8))
+    tc = TrainerConfig(
+        estimator="fopo",
+        fopo=FOPOConfig(num_items=400, num_samples=64, top_k=32, epsilon=0.8, retriever="exact"),
+        batch_size=16, num_steps=10, checkpoint_dir=str(tmp_path),
+        checkpoint_every=5, seed=0,
+    )
+    tr1 = FOPOTrainer(tc, ds)
+    tr1.train(10)
+    assert latest_checkpoint(str(tmp_path)) == 10
+
+    tr2 = FOPOTrainer(tc, ds)
+    assert tr2.maybe_restore()
+    assert tr2.step == 10
+    np.testing.assert_allclose(
+        np.asarray(tr1.params["w"]), np.asarray(tr2.params["w"])
+    )
+    assert tr2.loader.state.to_dict() == tr1.loader.state.to_dict()
+    # and training continues from there
+    tr2.train(3)
+    assert tr2.step == 13

@@ -1,0 +1,120 @@
+"""Gradient-estimator correctness: the covariance identity, SNIS
+convergence to the exact gradient, and REINFORCE agreement."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FOPOConfig,
+    covariance_gradient_dense_reference,
+    exact_objective,
+    fopo_loss,
+    make_retriever,
+    reinforce_surrogate,
+)
+from repro.core.policy import SoftmaxPolicy, linear_tower_apply, linear_tower_init
+
+
+@pytest.fixture(scope="module")
+def problem():
+    p, l, b = 400, 12, 6
+    kb, kx, kt, kr = jax.random.split(jax.random.PRNGKey(0), 4)
+    beta = jax.random.normal(kb, (p, l))
+    x = jax.random.normal(kx, (b, l))
+    params = linear_tower_init(kt, l, l)
+    policy = SoftmaxPolicy(tower=linear_tower_apply, item_dim=l)
+    rewards_dense = (jax.random.uniform(kr, (b, p)) < 0.05).astype(jnp.float32)
+    return p, l, b, beta, x, params, policy, rewards_dense
+
+
+def _cos(a, b):
+    a, b = np.asarray(a).ravel(), np.asarray(b).ravel()
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+
+
+def _avg_grad(fn, params, nkeys=20):
+    g = [np.asarray(jax.jit(fn)(jax.random.PRNGKey(100 + i))["w"]) for i in range(nkeys)]
+    return np.mean(g, axis=0)
+
+
+def test_covariance_identity(problem):
+    """Eq. 8: grad E_pi[r] == Cov_pi[r, grad f] — checked through AD of the
+    dense objective on both sides (analytic form) for a small catalog."""
+    p, l, b, beta, x, params, policy, rewards_dense = problem
+    # direct gradient of the dense objective
+    g1 = jax.grad(lambda pp: exact_objective(policy, pp, x, beta, rewards_dense))(params)
+    g2 = covariance_gradient_dense_reference(policy, params, x, beta, rewards_dense)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("eps,k", [(0.5, 32), (0.2, 128), (1.0, 32), (0.8, 256)])
+def test_snis_covgrad_converges_to_exact(problem, eps, k):
+    p, l, b, beta, x, params, policy, rewards_dense = problem
+    ref = np.asarray(
+        covariance_gradient_dense_reference(policy, params, x, beta, rewards_dense)["w"]
+    )
+
+    cfg = FOPOConfig(num_items=p, num_samples=1024, top_k=k, epsilon=eps, retriever="exact")
+    retr = make_retriever(cfg)
+
+    def reward_fn(actions):
+        return jnp.take_along_axis(rewards_dense, actions, axis=-1)
+
+    def grad_of(key):
+        return jax.grad(
+            lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfg, retr)[0]
+        )(params)
+
+    g = _avg_grad(grad_of, params, nkeys=16)
+    cos = _cos(g, ref)
+    assert cos > 0.97, f"eps={eps} K={k}: cos={cos}"
+    ratio = np.linalg.norm(g) / np.linalg.norm(ref)
+    assert 0.8 < ratio < 1.2, ratio
+
+
+def test_reinforce_matches_exact(problem):
+    p, l, b, beta, x, params, policy, rewards_dense = problem
+    ref = np.asarray(
+        covariance_gradient_dense_reference(policy, params, x, beta, rewards_dense)["w"]
+    )
+
+    def reward_fn(actions):
+        return jnp.take_along_axis(rewards_dense, actions, axis=-1)
+
+    def grad_of(key):
+        return jax.grad(
+            lambda pp: reinforce_surrogate(policy, pp, key, x, beta, reward_fn, 1024)
+        )(params)
+
+    g = _avg_grad(grad_of, params, nkeys=16)
+    assert _cos(g, ref) > 0.97
+
+
+def test_mixture_beats_uniform_at_equal_budget(problem):
+    """RQ2's mechanism: at equal S, a top-K mixture proposal estimates the
+    gradient better than the uniform proposal once pi is peaked."""
+    p, l, b, beta, x, params, policy, rewards_dense = problem
+    # sharpen the policy so uniform coverage of top items is poor
+    sharp = {"w": params["w"] * 3.0}
+    ref = np.asarray(
+        covariance_gradient_dense_reference(policy, sharp, x, beta, rewards_dense)["w"]
+    )
+
+    def reward_fn(actions):
+        return jnp.take_along_axis(rewards_dense, actions, axis=-1)
+
+    def run(eps):
+        cfg = FOPOConfig(num_items=p, num_samples=256, top_k=64, epsilon=eps, retriever="exact")
+        retr = make_retriever(cfg)
+
+        def grad_of(key):
+            return jax.grad(
+                lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfg, retr)[0]
+            )(sharp)
+
+        return _cos(_avg_grad(grad_of, sharp, nkeys=12), ref)
+
+    assert run(0.5) > run(1.0) - 0.02  # mixture at least as aligned

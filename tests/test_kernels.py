@@ -1,0 +1,158 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
+from repro.kernels.mips_topk import mips_topk, mips_topk_ref
+from repro.kernels.snis_covgrad import snis_covgrad, snis_covgrad_ref
+
+
+@pytest.mark.parametrize(
+    "b,p,l,k",
+    [
+        (8, 500, 16, 32),
+        (32, 3000, 64, 128),
+        (5, 1000, 100, 64),
+        (1, 257, 8, 16),  # odd shapes exercise padding
+        (16, 4096, 128, 256),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mips_topk_matches_ref(b, p, l, k, dtype):
+    kq, ki = jax.random.split(jax.random.PRNGKey(b * 7 + k))
+    q = jax.random.normal(kq, (b, l), dtype)
+    items = jax.random.normal(ki, (p, l), dtype)
+    out = mips_topk(q, items, k, tile_batch=8, block_items=256, interpret=True)
+    rs, ri = mips_topk_ref(q, items, k)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out.scores), np.asarray(rs), rtol=tol, atol=tol
+    )
+    # permutation-invariant id agreement (discrete boundary: ties reorder;
+    # bf16 rounding can swap near-equal scores)
+    agree = (np.sort(out.indices, -1) == np.sort(np.asarray(ri), -1)).mean()
+    assert agree > (0.999 if dtype == jnp.float32 else 0.97), agree
+
+
+def test_mips_topk_ids_valid():
+    q = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    items = jax.random.normal(jax.random.PRNGKey(1), (300, 16))
+    out = mips_topk(q, items, 50, block_items=128, interpret=True)
+    ids = np.asarray(out.indices)
+    assert (ids >= 0).all() and (ids < 300).all()
+    # top-k of each row must be distinct
+    for row in ids:
+        assert len(set(row.tolist())) == 50
+
+
+@pytest.mark.parametrize(
+    "v,d,b,t", [(100, 16, 4, 7), (1000, 64, 16, 20), (64, 128, 9, 3), (5000, 32, 32, 50)]
+)
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_embedding_bag_matches_ref(v, d, b, t, combiner):
+    kt, ki = jax.random.split(jax.random.PRNGKey(v + b))
+    table = jax.random.normal(kt, (v, d))
+    idx = jax.random.randint(ki, (b, t), -1, v)  # includes padding entries
+    out = embedding_bag(table, idx, combiner, interpret=True)
+    ref = embedding_bag_ref(table, idx, combiner)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_all_padding_row():
+    table = jax.random.normal(jax.random.PRNGKey(0), (10, 8))
+    idx = jnp.full((3, 4), -1, jnp.int32)
+    out = embedding_bag(table, idx, "sum", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize(
+    "b,s,l", [(8, 100, 16), (5, 1000, 100), (16, 257, 33), (8, 128, 128)]
+)
+def test_snis_covgrad_matches_ref(b, s, l):
+    ks = jax.random.split(jax.random.PRNGKey(b + s), 4)
+    scores = jax.random.normal(ks[0], (b, s)) * 3
+    log_q = jax.random.normal(ks[1], (b, s)) - 5
+    rewards = (jax.random.uniform(ks[2], (b, s)) < 0.1).astype(jnp.float32)
+    emb = jax.random.normal(ks[3], (b, s, l))
+    g, w = snis_covgrad(scores, log_q, rewards, emb, interpret=True)
+    gr, wr = snis_covgrad_ref(scores, log_q, rewards, emb)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), rtol=2e-4, atol=1e-6)
+
+
+def test_snis_covgrad_padding_neutral():
+    """Padding S to a lane multiple must not change the result."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    b, s, l = 4, 97, 10  # deliberately unaligned
+    scores = jax.random.normal(ks[0], (b, s))
+    log_q = jax.random.normal(ks[1], (b, s))
+    rewards = jax.random.uniform(ks[2], (b, s))
+    emb = jax.random.normal(ks[3], (b, s, l))
+    g, w = snis_covgrad(scores, log_q, rewards, emb, interpret=True)
+    gr, wr = snis_covgrad_ref(scores, log_q, rewards, emb)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.sum(np.asarray(w), -1), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (fwd + custom-VJP bwd)
+# ---------------------------------------------------------------------------
+import jax as _jax
+import jax.numpy as _jnp
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+
+def _ref_bhsd(q, k, v, **kw):
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    n_rep = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = _jnp.repeat(k.transpose(0, 2, 1, 3), n_rep, axis=1).reshape(b * h, -1, dh)
+    vf = _jnp.repeat(v.transpose(0, 2, 1, 3), n_rep, axis=1).reshape(b * h, -1, dh)
+    out = flash_attention_ref(qf, kf, vf, **kw)
+    return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize(
+    "b,s,h,kv,dh,window,cap",
+    [
+        (2, 256, 4, 2, 64, None, None),
+        (1, 384, 4, 4, 32, 128, 50.0),
+        (2, 300, 2, 1, 32, None, None),  # padding path
+    ],
+)
+def test_flash_attention_forward(b, s, h, kv, dh, window, cap):
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    out = flash_attention(q, k, v, causal=True, window=window, logit_cap=cap,
+                          tile_q=128, tile_kv=128, interpret=True)
+    ref = _ref_bhsd(q, k, v, causal=True, window=window, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (128, 50.0)])
+def test_flash_attention_backward(window, cap):
+    b, s, h, kv, dh = 2, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    g = jax.random.normal(ks[3], (b, s, h, dh))
+
+    def loss_pallas(q_, k_, v_):
+        o = flash_attention(q_, k_, v_, causal=True, window=window, logit_cap=cap,
+                            tile_q=128, tile_kv=128, interpret=True)
+        return jnp.sum(o * g)
+
+    def loss_ref(q_, k_, v_):
+        return jnp.sum(_ref_bhsd(q_, k_, v_, causal=True, window=window, logit_cap=cap) * g)
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=5e-3, atol=5e-4)

@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests: REDUCED configs of the same family run a
+real forward/train step on CPU, asserting shapes + finiteness. The full
+configs are exercised only through the AOT dry-run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import gnn, lm, recsys
+from repro.optim import adam
+
+LM_ARCHS = ["mistral-large-123b", "granite-8b", "gemma2-2b", "olmoe-1b-7b", "arctic-480b"]
+RECSYS_ARCHS = ["din", "dien", "sasrec", "wide-deep"]
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke(arch_id):
+    cfg = get_arch(arch_id).SMOKE_CONFIG
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+    logits, aux = lm.forward(cfg, params, toks)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    opt = adam(1e-3)
+    step = jax.jit(lm.make_train_step(cfg, opt))
+    p2, st2, loss = step(params, opt.init(params), toks, labels)
+    assert np.isfinite(float(loss)), arch_id
+    # one loss-goes-down sanity step on repeated data
+    for _ in range(10):
+        p2, st2, loss2 = step(p2, st2, toks, labels)
+    assert float(loss2) < float(loss), (float(loss), float(loss2))
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_decode_matches_forward(arch_id):
+    cfg = get_arch(arch_id).SMOKE_CONFIG
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    cache = lm.init_cache(cfg, b, s + 2)
+    pl_logits, cache = lm.prefill(cfg, params, toks, cache)
+    ref_logits, _ = lm.forward(cfg, params, toks)
+    np.testing.assert_allclose(
+        np.asarray(pl_logits, np.float32),
+        np.asarray(ref_logits[:, -1], np.float32),
+        rtol=3e-4, atol=3e-4,
+    )
+    nxt = jnp.argmax(pl_logits, -1)
+    d_logits, cache = lm.decode_step(cfg, params, nxt, cache)
+    ext = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    ref2, _ = lm.forward(cfg, params, ext)
+    np.testing.assert_allclose(
+        np.asarray(d_logits, np.float32),
+        np.asarray(ref2[:, -1], np.float32),
+        rtol=3e-3, atol=3e-3,
+    )
+
+
+def test_gnn_smoke():
+    cfg = get_arch("graphcast").SMOKE_CONFIG
+    params = gnn.init_params(cfg, jax.random.PRNGKey(0), d_feat=12)
+    n, e = 64, 256
+    feats = jax.random.normal(jax.random.PRNGKey(1), (n, 12))
+    src = jax.random.randint(jax.random.PRNGKey(2), (e,), -1, n)
+    dst = jax.random.randint(jax.random.PRNGKey(3), (e,), 0, n)
+    out = gnn.forward(cfg, params, feats, src, dst)
+    assert out.shape == (n, cfg.n_vars)
+    assert np.isfinite(np.asarray(out)).all()
+    opt = adam(1e-3)
+    step = jax.jit(gnn.make_train_step(cfg, opt))
+    tgt = jax.random.normal(jax.random.PRNGKey(4), (n, cfg.n_vars))
+    mask = jnp.ones((n,))
+    p, st, loss0 = step(params, opt.init(params), feats, src, dst, tgt, mask)
+    for _ in range(15):
+        p, st, loss = step(p, st, feats, src, dst, tgt, mask)
+    assert float(loss) < float(loss0)
+
+
+def test_gnn_padding_edges_are_inert():
+    """Edges marked -1 must not affect the output."""
+    cfg = get_arch("graphcast").SMOKE_CONFIG
+    params = gnn.init_params(cfg, jax.random.PRNGKey(0), d_feat=6)
+    n = 20
+    feats = jax.random.normal(jax.random.PRNGKey(1), (n, 6))
+    src = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    dst = jnp.asarray([1, 2, 3, 0], jnp.int32)
+    out1 = gnn.forward(cfg, params, feats, src, dst)
+    src_p = jnp.concatenate([src, jnp.full((7,), -1, jnp.int32)])
+    dst_p = jnp.concatenate([dst, jnp.full((7,), -1, jnp.int32)])
+    out2 = gnn.forward(cfg, params, feats, src_p, dst_p)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_smoke(arch_id):
+    cfg = get_arch(arch_id).SMOKE_CONFIG
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    b = 16
+    if cfg.kind == "wide_deep":
+        batch = {
+            "sparse": jax.random.randint(jax.random.PRNGKey(1), (b, cfg.n_sparse), 0, 10**6),
+            "dense": jax.random.normal(jax.random.PRNGKey(2), (b, cfg.n_dense)),
+            "label": jax.random.bernoulli(jax.random.PRNGKey(3), 0.3, (b,)).astype(jnp.float32),
+        }
+    else:
+        batch = {
+            "hist": jax.random.randint(jax.random.PRNGKey(1), (b, cfg.seq_len), -1, cfg.item_vocab),
+            "target": jax.random.randint(jax.random.PRNGKey(2), (b,), 0, cfg.item_vocab),
+            "label": jax.random.bernoulli(jax.random.PRNGKey(3), 0.3, (b,)).astype(jnp.float32),
+        }
+    logits = recsys.forward(cfg, params, batch)
+    assert logits.shape == (b,)
+    assert np.isfinite(np.asarray(logits)).all()
+    opt = adam(1e-3)
+    step = jax.jit(recsys.make_train_step(cfg, opt))
+    p, st, loss0 = step(params, opt.init(params), batch, jax.random.PRNGKey(7))
+    for i in range(15):
+        p, st, loss = step(p, st, batch, jax.random.PRNGKey(8 + i))
+    assert float(loss) < float(loss0), arch_id
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_retrieval_topk(arch_id):
+    cfg = get_arch(arch_id).SMOKE_CONFIG
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    c = 300
+    batch = {"candidates": jnp.arange(c, dtype=jnp.int32)}
+    if cfg.kind == "wide_deep":
+        batch["sparse"] = jax.random.randint(jax.random.PRNGKey(1), (1, cfg.n_sparse), 0, 10**6)
+        batch["dense"] = jax.random.normal(jax.random.PRNGKey(2), (1, cfg.n_dense))
+    else:
+        batch["hist"] = jax.random.randint(jax.random.PRNGKey(1), (1, cfg.seq_len), -1, cfg.item_vocab)
+    vals, ids = recsys.retrieval_topk(cfg, params, batch, k=10)
+    assert vals.shape[-1] == 10 and ids.shape[-1] == 10
+    assert (np.asarray(ids) >= 0).all() and (np.asarray(ids) < c).all()
+    v = np.asarray(vals)[0]
+    assert (np.diff(v) <= 1e-6).all()  # descending
+
+
+def test_sasrec_fopo_objective_improves_reward():
+    """The flagship integration: FOPO (SNIS + MIPS proposal) training of
+    SASRec's catalog policy head lifts the hit rate."""
+    cfg = get_arch("sasrec").SMOKE_CONFIG
+    cfg = dataclasses.replace(cfg, item_vocab=500)
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, t = 32, cfg.seq_len
+    # synthetic sequential structure: next item = (last item + 1) % V
+    hist = rng.integers(0, cfg.item_vocab - 1, (b, t)).astype(np.int32)
+    positives = ((hist[:, -1:] + 1) % cfg.item_vocab).astype(np.int32)
+    batch = {"hist": jnp.asarray(hist), "positives": jnp.asarray(positives)}
+    opt = adam(5e-3)
+    step = jax.jit(recsys.make_train_step(cfg, opt, objective="fopo"))
+
+    def hit_rate(p):
+        u = recsys.sasrec_user_vector(cfg, p, batch["hist"])
+        top1 = jnp.argmax(u @ p["items"].T, axis=-1)
+        return float((np.asarray(top1)[:, None] == positives).any(1).mean())
+
+    before = hit_rate(params)
+    st = opt.init(params)
+    p = params
+    for i in range(60):
+        p, st, loss = step(p, st, batch, jax.random.PRNGKey(i))
+    after = hit_rate(p)
+    assert after > before + 0.2, (before, after)

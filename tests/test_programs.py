@@ -1,0 +1,62 @@
+"""Cell-program construction for the full assigned pool: every
+(arch x shape x mesh-mode) builds abstract args + sharding trees without
+touching devices. Compilation is covered by the dry-run (results/)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, all_cells, get_arch
+from repro.launch.specs import build_program
+
+CELLS = [
+    (a, s)
+    for a, s, cell, reason in all_cells()
+    if reason is None
+]
+SKIPPED = [(a, s, r) for a, s, c, r in all_cells() if r is not None]
+
+
+def test_pool_has_40_cells():
+    assert len(CELLS) + len(SKIPPED) == 40
+    assert len(SKIPPED) == 4  # long_500k on the 4 pure full-attention archs
+
+
+@pytest.mark.parametrize("arch_id,shape_name", CELLS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_program_builds(arch_id, shape_name, multi_pod):
+    prog = build_program(arch_id, shape_name, multi_pod=multi_pod)
+    # args and in_specs must be aligned pytrees
+    args_flat = jax.tree_util.tree_structure(tuple(prog.args))
+    specs_flat = jax.tree_util.tree_structure(
+        tuple(prog.in_specs), is_leaf=lambda x: isinstance(x, P)
+    )
+    assert args_flat.num_leaves == specs_flat.num_leaves, (
+        args_flat.num_leaves, specs_flat.num_leaves,
+    )
+    assert prog.model_flops > 0
+    # every sharded dim must divide by its mesh axes
+    from repro.dist.sharding import AXIS_SIZES
+
+    def check(leaf, spec):
+        if not hasattr(leaf, "shape"):
+            return
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            size = 1
+            for a in axes:
+                size *= AXIS_SIZES[a]
+            assert dim % size == 0, (arch_id, shape_name, leaf.shape, spec)
+
+    jax.tree.map(
+        check, tuple(prog.args), tuple(prog.in_specs),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def test_skip_reasons_documented():
+    for arch_id, shape_name, reason in SKIPPED:
+        assert "full-attention" in reason
+        mod = get_arch(arch_id)
+        assert shape_name in mod.SKIPPED_SHAPES

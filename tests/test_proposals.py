@@ -1,0 +1,64 @@
+"""Mixture proposal q_{K,eps}: pmf normalisation + sampler agreement."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.proposals import MixtureProposal, UniformProposal, adaptive_epsilon
+
+
+@hypothesis.given(
+    st.integers(8, 64),  # P
+    st.integers(2, 8),  # K
+    st.floats(0.0625, 1.0, width=32),  # eps
+)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_pmf_sums_to_one(p, k, eps):
+    k = min(k, p)
+    key = jax.random.PRNGKey(p * 1000 + k)
+    scores = jax.random.normal(key, (1, k))
+    # arbitrary distinct top-k ids
+    ids = jax.random.permutation(jax.random.PRNGKey(1), p)[:k][None]
+    prop = MixtureProposal(num_items=p, epsilon=float(eps))
+    all_actions = jnp.arange(p)[None]  # evaluate pmf on the whole catalog
+    logq = prop.log_prob(all_actions, ids, scores)
+    total = float(jnp.sum(jnp.exp(logq)))
+    assert abs(total - 1.0) < 1e-4, total
+
+
+def test_sampler_matches_pmf():
+    """Empirical frequencies of the mixture sampler match the pmf."""
+    p, k, eps, s = 30, 5, 0.4, 200_000
+    key = jax.random.PRNGKey(0)
+    scores = jax.random.normal(key, (1, k)) * 2
+    ids = jnp.arange(10, 10 + k)[None]
+    prop = MixtureProposal(num_items=p, epsilon=eps)
+    sample = prop.sample(jax.random.PRNGKey(1), ids, scores, s)
+    counts = np.bincount(np.asarray(sample.actions[0]), minlength=p) / s
+    pmf = np.exp(
+        np.asarray(prop.log_prob(jnp.arange(p)[None], ids, scores)[0])
+    )
+    np.testing.assert_allclose(counts, pmf, atol=5e-3)
+    # log_q at the draws must equal the pmf entries
+    np.testing.assert_allclose(
+        np.asarray(sample.log_q[0]),
+        np.log(pmf)[np.asarray(sample.actions[0])],
+        rtol=1e-4,
+    )
+
+
+def test_uniform_proposal():
+    prop = UniformProposal(num_items=100)
+    sample = prop.sample(jax.random.PRNGKey(0), 4, 1000)
+    assert sample.actions.shape == (4, 1000)
+    assert (np.asarray(sample.actions) >= 0).all()
+    assert (np.asarray(sample.actions) < 100).all()
+    np.testing.assert_allclose(np.asarray(sample.log_q), -np.log(100.0), rtol=1e-6)
+
+
+def test_adaptive_epsilon_schedule():
+    assert float(adaptive_epsilon(0, 100)) == 1.0
+    assert abs(float(adaptive_epsilon(100, 100)) - 0.1) < 1e-6
+    mid = float(adaptive_epsilon(50, 100))
+    assert 0.1 < mid < 1.0

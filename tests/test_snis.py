@@ -1,0 +1,72 @@
+"""Property tests for the SNIS estimator and covariance coefficients."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.snis import (
+    snis_covariance_coefficients,
+    snis_expectation,
+    snis_weights,
+)
+
+finite_f = st.floats(-20.0, 20.0, allow_nan=False, allow_infinity=False, width=32)
+
+
+@hypothesis.given(
+    hnp.arrays(np.float32, (3, 17), elements=finite_f),
+    hnp.arrays(np.float32, (3, 17), elements=finite_f),
+)
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_weights_sum_to_one(scores, log_q):
+    w = snis_weights(jnp.asarray(scores), jnp.asarray(log_q))
+    np.testing.assert_allclose(np.sum(np.asarray(w.wbar), axis=-1), 1.0, rtol=1e-5)
+    assert (np.asarray(w.wbar) >= 0).all()
+    ess = np.asarray(w.ess)
+    assert ((ess >= 1.0 - 1e-4) & (ess <= 17.0 + 1e-3)).all()
+
+
+@hypothesis.given(
+    hnp.arrays(np.float32, (4, 9), elements=finite_f),
+    hnp.arrays(np.float32, (4, 9), elements=finite_f),
+    hnp.arrays(np.float32, (4, 9), elements=st.floats(0, 1, width=32)),
+)
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_covariance_coefficients_sum_to_zero(scores, log_q, rewards):
+    w = snis_weights(jnp.asarray(scores), jnp.asarray(log_q))
+    c = snis_covariance_coefficients(w.wbar, jnp.asarray(rewards))
+    np.testing.assert_allclose(np.sum(np.asarray(c), axis=-1), 0.0, atol=1e-5)
+
+
+def test_snis_converges_to_exact_expectation():
+    """E_pi[g] via SNIS from a shifted proposal -> exact as S grows."""
+    rng = np.random.default_rng(0)
+    p = 50
+    logits = rng.normal(size=p).astype(np.float32)
+    pi = np.exp(logits - logits.max())
+    pi /= pi.sum()
+    g = rng.normal(size=p).astype(np.float32)
+    exact = float(np.sum(pi * g))
+
+    q = np.ones(p) / p  # uniform proposal
+    s = 200_000
+    draws = rng.choice(p, size=s, p=q)
+    scores = jnp.asarray(logits[draws])[None]
+    log_q = jnp.asarray(np.log(q[draws]).astype(np.float32))[None]
+    w = snis_weights(scores, log_q)
+    est = float(snis_expectation(w.wbar, jnp.asarray(g[draws])[None])[0])
+    assert abs(est - exact) < 0.02, (est, exact)
+
+
+def test_self_normalisation_invariant_to_score_shift():
+    """Adding a constant to all scores (i.e. unknown log Z) changes nothing
+    — the whole point of SNIS."""
+    key = jax.random.PRNGKey(0)
+    scores = jax.random.normal(key, (2, 64))
+    log_q = jax.random.normal(jax.random.PRNGKey(1), (2, 64))
+    w1 = snis_weights(scores, log_q)
+    w2 = snis_weights(scores + 123.0, log_q)
+    np.testing.assert_allclose(np.asarray(w1.wbar), np.asarray(w2.wbar), rtol=1e-5)

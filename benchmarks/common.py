@@ -41,6 +41,7 @@ def make_trainer(
     steps: int = 300,
     batch_size: int = 32,
     seed: int = 0,
+    fused: bool = False,
 ) -> FOPOTrainer:
     p = train_ds.item_embeddings.shape[0]
     fopo = FOPOConfig(
@@ -49,6 +50,7 @@ def make_trainer(
         top_k=min(top_k, p),
         epsilon=epsilon,
         retriever=retriever,
+        fused=fused,
     )
     tc = TrainerConfig(
         estimator=estimator, fopo=fopo, batch_size=batch_size,

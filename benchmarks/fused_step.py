@@ -1,0 +1,105 @@
+"""Fused-step tracking benchmark: emits results/BENCH_fused_step.json.
+
+Three numbers tracked from this PR onward so the perf trajectory of the
+fused FOPO step is visible in CI artifacts:
+
+  * jnp trainer step time (the pre-fusion hot path, CPU-measurable),
+  * the fused path's jnp twin step time (same math, gather
+    materialised — the CPU proxy; real fused timings are TPU-only),
+  * fused interpret-mode validation: steps run end-to-end through
+    FOPOTrainer plus the fused-vs-jnp parameter parity error.
+
+Interpret mode is a correctness harness, not a performance proxy — it
+is *validated*, never timed, here.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_trainer, twitch_small
+from benchmarks.roofline import snis_hbm_bytes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run() -> None:
+    # CPU-tractable slice of the paper protocol
+    train_ds, _ = twitch_small(embed_dim=32, num_items=10_000)
+
+    # 1) jnp (unfused) trainer step — the number the fusion attacks
+    jnp_tr = make_trainer(train_ds, "fopo", retriever="exact",
+                          num_samples=512, top_k=128, batch_size=32, steps=12)
+    jnp_tr.train(2)  # warm up / compile
+    t0 = time.perf_counter()
+    jnp_tr.train(10)
+    jnp_step_us = (time.perf_counter() - t0) / 10 * 1e6
+
+    # 2) fused jnp twin step (same estimator routed through the fused
+    #    loss formulation, gather materialised — CPU proxy)
+    from repro.kernels.snis_covgrad import fused_covariance_loss_ref
+
+    b, s, l = 32, 512, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    h = jax.random.normal(ks[0], (b, l))
+    beta = jnp.asarray(train_ds.item_embeddings)
+    actions = jax.random.randint(ks[1], (b, s), 0, beta.shape[0], dtype=jnp.int32)
+    log_q = jax.random.normal(ks[2], (b, s)) - 5
+    rewards = (jax.random.uniform(ks[3], (b, s)) < 0.1).astype(jnp.float32)
+    twin = jax.jit(lambda hh: fused_covariance_loss_ref(hh, beta, actions, log_q, rewards)[0])
+    grad_twin = jax.jit(jax.grad(lambda hh: fused_covariance_loss_ref(
+        hh, beta, actions, log_q, rewards)[0]))
+    jax.block_until_ready((twin(h), grad_twin(h)))
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = (twin(h), grad_twin(h))
+    jax.block_until_ready(out)
+    twin_us = (time.perf_counter() - t0) / 10 * 1e6
+
+    # 3) fused interpret validation: a small end-to-end trainer run and
+    #    its parameter parity against the unfused trajectory
+    val_steps = 3
+    small_kw = dict(retriever="exact", num_samples=32, top_k=16,
+                    batch_size=8, steps=val_steps)
+    fused_tr = make_trainer(train_ds, "fopo", fused=True, **small_kw)
+    fused_hist = fused_tr.train(val_steps)
+    ref_tr = make_trainer(train_ds, "fopo", **small_kw)
+    ref_tr.train(val_steps)
+    parity = float(np.max(np.abs(
+        np.asarray(fused_tr.params["w"]) - np.asarray(ref_tr.params["w"]))))
+    ok = bool(np.all(np.isfinite(fused_hist["loss"])) and parity < 1e-4)
+
+    report = {
+        "bench": "fused_step",
+        "shapes": {"batch": b, "num_samples": s, "embed_dim": l,
+                   "num_items": int(beta.shape[0])},
+        "jnp_step_us": jnp_step_us,
+        "fused_twin_loss_grad_us": twin_us,
+        "fused_interpret": {
+            "trainer_steps_validated": val_steps,
+            "param_parity_max_abs_err": parity,
+            "ok": ok,
+        },
+        "hbm_bytes_model": {
+            "fused": snis_hbm_bytes(b, s, l, fused=True),
+            "unfused": snis_hbm_bytes(b, s, l, fused=False),
+        },
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_fused_step.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    emit("fused_step_jnp", jnp_step_us, "trainer_step_unfused")
+    emit("fused_step_twin", twin_us, "loss+grad_jnp_twin")
+    emit("fused_step_interpret", 0.0,
+         f"steps={val_steps};parity={parity:.2e};ok={ok}")
+
+
+if __name__ == "__main__":
+    run()

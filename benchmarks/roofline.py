@@ -1,5 +1,7 @@
 """Roofline report: reads results/dryrun_*.json (produced by
-repro.launch.dryrun) and emits the §Roofline markdown table + CSV rows.
+repro.launch.dryrun) and emits the §Roofline markdown table + CSV rows,
+plus the analytic HBM-traffic model of the fused SNIS step
+(`snis_hbm_bytes`) — fused vs unfused bytes moved per training step.
 
 Terms (per cell, single-pod 16x16 = 256 chips):
   compute    = FLOPs / (chips * 197e12)
@@ -15,6 +17,39 @@ import json
 import os
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+# ---------------------------------------------------------------------------
+# fused-step HBM traffic model (see repro/kernels/snis_covgrad docstring)
+# ---------------------------------------------------------------------------
+
+def snis_hbm_bytes(b: int, s: int, l: int, *, fused: bool, dtype_bytes: int = 4) -> int:
+    """HBM bytes moved by one SNIS + covariance-gradient step.
+
+    unfused (jnp): the gather writes the (B, S, L) embedding tensor to
+    HBM and the weighting chain reads it back, on top of the beta row
+    reads themselves; scores/log_q/rewards/wbar round-trip as (B, S).
+    fused (Pallas): beta rows stream HBM->VMEM once (scalar-prefetch
+    gather); only (B, S)/(B, L) tensors touch HBM.
+    """
+    gather_read = b * s * l  # beta rows -> wherever the gather lands
+    small = 4 * b * s + b * s + 2 * b * l  # scores/logq/rewards/actions + wbar + h/grad
+    if fused:
+        return dtype_bytes * (gather_read + small)
+    # + (B,S,L) written by take(), + read back by the weighting chain
+    return dtype_bytes * (gather_read + 2 * b * s * l + small)
+
+
+def fused_rows(shapes=((32, 1000, 128), (32, 1000, 64), (128, 1000, 128))) -> list[str]:
+    out = []
+    for b, s, l in shapes:
+        fb = snis_hbm_bytes(b, s, l, fused=True)
+        ub = snis_hbm_bytes(b, s, l, fused=False)
+        out.append(
+            f"snis_step_hbm_B{b}_S{s}_L{l},0.0,"
+            f"fused_bytes={fb};unfused_bytes={ub};saving={ub / fb:.2f}x"
+        )
+    return out
 
 
 def load(mesh: str) -> list[dict]:
@@ -57,6 +92,8 @@ def markdown_table(mesh: str = "pod") -> str:
 
 
 def run() -> None:
+    for row in fused_rows():
+        print(row)
     for mesh in ("pod", "multipod"):
         rows = load(mesh)
         ok = sum(1 for r in rows if r.get("ok"))

@@ -13,6 +13,7 @@ import sys
 import time
 
 from benchmarks import (
+    fused_step,
     grad_quality,
     kernel_bench,
     roofline,
@@ -31,6 +32,7 @@ SUITES = {
     "rq4": rq4_mc_samples.run,
     "gradq": grad_quality.run,
     "kernels": kernel_bench.run,
+    "fused": fused_step.run,  # emits results/BENCH_fused_step.json
     "roofline": roofline.run,
 }
 

@@ -1,0 +1,36 @@
+"""jax version compatibility shims (thin re-exports, no behaviour).
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to
+``jax.shard_map`` (~0.5) and renamed its replication-check kwarg
+``check_rep`` -> ``check_vma``; resolve whichever the installed jax
+provides (translating the kwarg) so the distributed paths run on the
+pinned toolchain and on newer jax. Kernel-side shims live in
+`repro.kernels._compat`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-0.5 toolchain
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` appeared ~0.5; fall back to the classic
+    ``psum(1, axis)`` idiom (constant-folded to a python int) before."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+__all__ = ["shard_map", "axis_size"]

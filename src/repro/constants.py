@@ -1,0 +1,21 @@
+"""Shared numeric sentinels used across kernels and jnp twins.
+
+Values are *python floats* on purpose: inside Pallas kernel bodies a
+`jnp` constant would be captured as a traced constant (an extra VMEM
+operand); a python scalar folds into the instruction stream. jnp call
+sites weak-type-promote them to the surrounding dtype.
+
+``NEG_INF`` is a finite stand-in for -inf: real -inf poisons
+max-subtracted softmax paths (``exp(-inf - -inf) = nan``) whereas the
+finite sentinel keeps every intermediate well-defined while still
+underflowing ``exp`` to exactly 0 against any realistic score.
+
+``LOG_Q_PAD`` is the log-proposal value assigned to padded/masked
+sample slots: ``exp(score - LOG_Q_PAD)`` is exactly 0.0 in fp32, so a
+masked slot carries zero SNIS weight through softmax, centering and the
+covariance reduction.
+"""
+from __future__ import annotations
+
+NEG_INF = -3.0e38
+LOG_Q_PAD = 3.0e38

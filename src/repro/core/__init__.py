@@ -3,6 +3,7 @@ from repro.core.gradients import (
     covariance_gradient_dense_reference,
     covariance_surrogate,
     exact_objective,
+    fused_covariance_loss,
     reinforce_surrogate,
 )
 from repro.core.lm_head import FopoLMHeadConfig, fopo_lm_head_loss
@@ -27,7 +28,12 @@ from repro.core.rewards import (
     make_ips_reward,
     make_session_reward,
 )
-from repro.core.snis import snis_covariance_coefficients, snis_expectation, snis_weights
+from repro.core.snis import (
+    snis_covariance_coefficients,
+    snis_diagnostics,
+    snis_expectation,
+    snis_weights,
+)
 
 __all__ = [
     "FOPOConfig",
@@ -50,11 +56,13 @@ __all__ = [
     "make_dr_reward",
     "make_dot_reward_model",
     "snis_weights",
+    "snis_diagnostics",
     "snis_expectation",
     "snis_covariance_coefficients",
     "exact_objective",
     "reinforce_surrogate",
     "covariance_surrogate",
+    "fused_covariance_loss",
     "covariance_gradient_dense_reference",
     "FopoLMHeadConfig",
     "fopo_lm_head_loss",

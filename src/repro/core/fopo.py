@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.gradients import covariance_surrogate, reinforce_surrogate
 from repro.core.policy import SoftmaxPolicy
-from repro.core.proposals import MixtureProposal, UniformProposal
+from repro.core.proposals import MixtureProposal, ProposalSample, UniformProposal
 from repro.mips.exact import TopK, topk_exact
 
 Retriever = Callable[[jnp.ndarray, jnp.ndarray], TopK]  # (h, beta) -> TopK
@@ -35,6 +35,12 @@ class FOPOConfig:
     top_k: int = 256  # K
     epsilon: float = 0.8
     retriever: str = "streaming"  # exact | streaming | ivf | sharded | pallas
+    # fused=True runs the SNIS + covariance-gradient step through the
+    # Pallas custom_vjp kernels (in-kernel beta gather — no (B, S, L)
+    # tensor in HBM). fused_interpret=None auto-falls-back to interpret
+    # mode on non-TPU backends (resolved by the trainer / surrogate).
+    fused: bool = False
+    fused_interpret: bool | None = None
 
 
 def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
@@ -81,31 +87,35 @@ def fopo_loss(
     eps = cfg.epsilon if epsilon is None else epsilon
     h = jax.lax.stop_gradient(policy.user_embedding(params, x))  # proposal side
     if isinstance(eps, float) and eps >= 1.0:
-        prop = UniformProposal(cfg.num_items)
-        sample = prop.sample(key, x.shape[0], cfg.num_samples)
+        sample = UniformProposal(cfg.num_items).sample(key, x.shape[0], cfg.num_samples)
     else:
         topk = retriever(h, beta)
-        prop = MixtureProposal(cfg.num_items, float(eps) if isinstance(eps, float) else 0.0)
-        if not isinstance(eps, float):
-            prop = dataclasses.replace(prop, epsilon=0.0)  # pmf uses array path
-        sample = _sample_mixture(prop, key, topk, cfg.num_samples, eps)
+        if isinstance(eps, float):
+            prop = MixtureProposal(cfg.num_items, eps)
+            sample = prop.sample(key, topk.indices, topk.scores, cfg.num_samples)
+        else:  # traced epsilon (adaptive schedule)
+            sample = _sample_mixture_traced(
+                key, topk, cfg.num_samples, eps, cfg.num_items
+            )
     rewards = jax.lax.stop_gradient(reward_fn(sample.actions))
     loss, aux = covariance_surrogate(
-        policy, params, x, beta, sample.actions, sample.log_q, rewards
+        policy, params, x, beta, sample.actions, sample.log_q, rewards,
+        fused=cfg.fused, fused_interpret=cfg.fused_interpret,
     )
     return loss, aux
 
 
-def _sample_mixture(prop: MixtureProposal, key, topk: TopK, s: int, eps):
-    if isinstance(eps, float):
-        return prop.sample(key, topk.indices, topk.scores, s)
-    # traced epsilon (adaptive schedule): re-implement with dynamic eps
+def _sample_mixture_traced(key, topk: TopK, s: int, eps, num_items: int):
+    """MixtureProposal.sample with a *traced* epsilon (adaptive schedule):
+    identical draws and log-pmf to the float-eps path at equal key/eps
+    (regression-tested), but eps stays a jnp scalar so it can come from
+    a schedule inside jit. Assumes 0 < eps < 1 at runtime."""
     import jax.random as jr
 
     batch, k = topk.indices.shape
     k_arm, k_uni, k_kappa = jr.split(key, 3)
     uni_arm = jr.uniform(k_arm, (batch, s)) < eps
-    uniform_draw = jr.randint(k_uni, (batch, s), 0, prop.num_items, dtype=jnp.int32)
+    uniform_draw = jr.randint(k_uni, (batch, s), 0, num_items, dtype=jnp.int32)
     g = jr.gumbel(k_kappa, (batch, s, k), jnp.float32)
     slot = jnp.argmax(topk.scores[:, None, :] + g, axis=-1).astype(jnp.int32)
     kappa_draw = jnp.take_along_axis(topk.indices, slot, axis=1)
@@ -118,11 +128,9 @@ def _sample_mixture(prop: MixtureProposal, key, topk: TopK, s: int, eps):
         jnp.sum(jnp.where(hit, log_kappa_full[:, None, :], 0.0), axis=-1),
         -jnp.inf,
     )
-    log_u = jnp.log(eps) - jnp.log(float(prop.num_items))
+    log_u = jnp.log(eps) - jnp.log(float(num_items))
     log_mix = jnp.logaddexp(log_u, jnp.log1p(-eps) + log_kappa)
     log_q = jnp.where(in_topk, log_mix, log_u)
-    from repro.core.proposals import ProposalSample
-
     return ProposalSample(
         actions=actions, log_q=log_q, topk_slot=jnp.where(uni_arm, -1, slot)
     )

@@ -12,14 +12,28 @@ Each returns a scalar *surrogate loss* whose jax.grad equals (minus) the
 desired policy-gradient estimate, so any optimizer / AD machinery
 composes. Coefficients inside surrogates are stop_grad'ed — exactly
 Algorithm 1's semantics (weights are evaluated, not differentiated).
+
+`covariance_surrogate(fused=True)` swaps the jnp chain for the Pallas
+custom_vjp path (`fused_covariance_loss`): forward kernel gathers beta
+in-kernel (scalar prefetch) and the backward kernel regathers for
+dL/dh, so the (B, S, L) gathered-embedding tensor never exists in HBM.
+See `repro.kernels.snis_covgrad` for the architecture.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import SoftmaxPolicy
-from repro.core.snis import snis_covariance_coefficients, snis_weights
+from repro.core.snis import (
+    snis_covariance_coefficients,
+    snis_diagnostics,
+    snis_weights,
+)
+from repro.kernels.snis_covgrad import snis_covgrad_bwd, snis_scores_fused
 
 
 # ---------------------------------------------------------------------------
@@ -77,25 +91,106 @@ def covariance_surrogate(
     actions: jnp.ndarray,  # [B, S] proposal draws
     log_q: jnp.ndarray,  # [B, S] proposal log-pmf at the draws
     rewards: jnp.ndarray,  # [B, S]
+    *,
+    fused: bool = False,
+    fused_interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Surrogate whose gradient is the SNIS covariance gradient.
 
     grad_theta = sum_s c_s grad_theta f_theta(a_s, x),
     c_s = stop_grad(wbar_s (r_s - rbar)) — see snis.py. Returns aux
     diagnostics (ESS, rbar) for monitoring.
+
+    ``fused=True`` routes through the Pallas custom_vjp path
+    (`fused_covariance_loss`): the beta gather happens in-kernel and the
+    (B, S, L) gathered-embedding tensor never reaches HBM. Requires the
+    bilinear score form f = h . beta_a (SoftmaxPolicy's contract), and
+    treats beta as *fixed* (Assumption 1): its cotangent is hard zero,
+    whereas the unfused path lets jax.grad differentiate wrt beta too.
+    ``fused_interpret=None`` auto-selects interpret mode off-TPU.
     """
+    if fused:
+        if fused_interpret is None:
+            fused_interpret = jax.default_backend() != "tpu"
+        h = policy.user_embedding(params, x)  # [B, L] differentiable
+        return fused_covariance_loss(
+            h, beta, actions, log_q, rewards, interpret=fused_interpret
+        )
     scores = policy.scores_at(params, x, beta, actions)  # [B, S] differentiable
     w = snis_weights(jax.lax.stop_gradient(scores), log_q)
     coeff = snis_covariance_coefficients(w.wbar, rewards)  # [B, S]
     coeff = jax.lax.stop_gradient(coeff)
     # maximise covariance between reward and score direction => minimise -sum
     loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
-    aux = {
-        "ess": jnp.mean(w.ess),
-        "rbar": jnp.mean(jnp.sum(w.wbar * rewards, axis=-1)),
-        "max_wbar": jnp.mean(jnp.max(w.wbar, axis=-1)),
-    }
+    return loss, snis_diagnostics(w.wbar, rewards)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas path — custom_vjp over the gather-fused kernels
+# ---------------------------------------------------------------------------
+
+def _fused_loss_pieces(interpret, h, beta, actions, log_q, rewards):
+    scores = snis_scores_fused(
+        h, beta, actions, log_q, rewards, interpret=interpret
+    )  # forward kernel: in-kernel gather, no (B, S, L) in HBM
+    wbar = jax.nn.softmax(scores - log_q, axis=-1)  # exactly 0 on masked slots
+    coeff = snis_covariance_coefficients(wbar, rewards)
+    loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
+    return loss, snis_diagnostics(wbar, rewards), coeff
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_covariance_loss(interpret, h, beta, actions, log_q, rewards):
+    loss, aux, _ = _fused_loss_pieces(interpret, h, beta, actions, log_q, rewards)
     return loss, aux
+
+
+def _fused_covariance_loss_fwd(interpret, h, beta, actions, log_q, rewards):
+    loss, aux, coeff = _fused_loss_pieces(
+        interpret, h, beta, actions, log_q, rewards
+    )
+    return (loss, aux), (coeff, actions, beta)
+
+
+def _fused_covariance_loss_bwd(interpret, res, ct):
+    coeff, actions, beta = res
+    ct_loss = ct[0]  # aux cotangents are diagnostics — discarded
+    batch = coeff.shape[0]
+    # per-sample score gradients dL/df_{bs}; Algorithm 1 evaluates the
+    # SNIS coefficients, it does not differentiate them
+    g_scores = (-ct_loss / batch) * coeff
+    grad_h = snis_covgrad_bwd(g_scores, actions, beta, interpret=interpret)
+    return (
+        grad_h,
+        jnp.zeros_like(beta),  # fixed embeddings (Assumption 1); DCE'd
+        np.zeros(actions.shape, dtype=jax.dtypes.float0),
+        jnp.zeros_like(g_scores),  # log_q: weights are evaluated, not diff'd
+        jnp.zeros_like(g_scores),  # rewards: logged feedback, constant
+    )
+
+
+_fused_covariance_loss.defvjp(_fused_covariance_loss_fwd, _fused_covariance_loss_bwd)
+
+
+def fused_covariance_loss(
+    h: jnp.ndarray,  # [B, L] user embeddings (differentiable)
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings
+    actions: jnp.ndarray,  # [B, S] int32; -1 marks masked slots
+    log_q: jnp.ndarray,  # [B, S]; LOG_Q_PAD on masked slots
+    rewards: jnp.ndarray,  # [B, S]
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, dict]:
+    """The fused FOPO step: (loss, aux) with a custom VJP whose backward
+    runs the Pallas gather-reduce kernel. Composes with jax.grad /
+    optimizers; gradients flow to ``h`` only (the user-tower chain rule
+    continues from there).
+
+    CONTRACT (Assumption 1): ``beta`` is a *fixed* embedding table — its
+    cotangent is hard zero here, unlike the unfused path where jax.grad
+    wrt beta returns the true scatter gradient. Do not use ``fused=True``
+    to fine-tune item embeddings."""
+    return _fused_covariance_loss(interpret, h, beta, actions, log_q, rewards)
 
 
 def covariance_gradient_dense_reference(

@@ -40,6 +40,18 @@ def snis_expectation(wbar: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(wbar[..., None] * values, axis=-2)
 
 
+def snis_diagnostics(wbar: jnp.ndarray, rewards: jnp.ndarray) -> dict:
+    """Batch-mean monitoring scalars shared by the jnp and fused paths:
+    ESS, SNIS reward estimate rbar, and the max normalised weight (a
+    weight-collapse alarm). Inputs are [B, S]."""
+    ess = 1.0 / jnp.maximum(jnp.sum(wbar**2, axis=-1), 1e-30)
+    return {
+        "ess": jnp.mean(ess),
+        "rbar": jnp.mean(jnp.sum(wbar * rewards, axis=-1)),
+        "max_wbar": jnp.mean(jnp.max(wbar, axis=-1)),
+    }
+
+
 def snis_covariance_coefficients(
     wbar: jnp.ndarray, rewards: jnp.ndarray
 ) -> jnp.ndarray:

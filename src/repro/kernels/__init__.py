@@ -8,14 +8,21 @@ Each kernel package ships three modules:
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.mips_topk import mips_topk, mips_topk_ref
-from repro.kernels.snis_covgrad import snis_covgrad, snis_covgrad_ref
+from repro.kernels.snis_covgrad import (
+    snis_covgrad_bwd,
+    snis_covgrad_fused,
+    snis_covgrad_fused_ref,
+    snis_covgrad_ref,
+)
 
 __all__ = [
     "mips_topk",
     "mips_topk_ref",
     "embedding_bag",
     "embedding_bag_ref",
-    "snis_covgrad",
+    "snis_covgrad_fused",
+    "snis_covgrad_bwd",
+    "snis_covgrad_fused_ref",
     "snis_covgrad_ref",
     "flash_attention",
     "flash_attention_ref",

@@ -1,0 +1,13 @@
+"""jax version compatibility for the Pallas TPU kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(~0.5); support both so the kernels run on the pinned toolchain and on
+newer jax without edits.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -30,7 +30,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -3.0e38  # python scalar: jnp constants would be captured consts
+from repro.kernels._compat import CompilerParams
+
+from repro.constants import NEG_INF  # python scalar: jnp consts would be captured
 
 
 def _mips_topk_kernel(
@@ -99,7 +101,7 @@ def mips_topk_pallas(
             jax.ShapeDtypeStruct((b, k), jnp.float32),
             jax.ShapeDtypeStruct((b, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

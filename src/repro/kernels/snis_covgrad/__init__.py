@@ -1,4 +1,78 @@
-from repro.kernels.snis_covgrad.ops import snis_covgrad
-from repro.kernels.snis_covgrad.ref import snis_covgrad_ref
+"""Fused FOPO training step: SNIS + covariance gradient with in-kernel
+beta gather, wrapped in `jax.custom_vjp` (see `repro.core.gradients`).
 
-__all__ = ["snis_covgrad", "snis_covgrad_ref"]
+Architecture
+============
+
+The per-step estimator (paper Algorithm 1) needs, per context b and
+proposal draw s:
+
+    f_s  = h_b . beta_{a_s}            sampled scores
+    wbar = softmax(f - log q)          SNIS weights
+    g_b  = sum_s wbar_s (r_s - rbar_b) beta_{a_s}
+
+Three cooperating pieces make this the *real* training path instead of
+a side-car benchmark kernel:
+
+* `kernel.py` — forward kernel, grid (B, S). Actions are a
+  scalar-prefetch operand; the beta BlockSpec index_map turns them into
+  per-step (1, L) row DMAs (HBM -> VMEM), so the (B, S, L) gathered
+  tensor never exists in HBM. The softmax is computed online
+  (flash-attention-style running max/normaliser) and the covariance
+  gradient falls out of rescaled accumulators at the last sample. A
+  `compute_covgrad=False` trace emits only the sampled scores — that is
+  what the custom_vjp forward uses.
+* `backward.py` — backward kernel: dL/dh_b = sum_s c_{bs} beta_{a_bs}
+  with the per-sample score gradients c = -(g/B) wbar (r - rbar) as a
+  (1, 1) operand and the same scalar-prefetch gather. Together with the
+  forward this closes the custom_vjp: `jax.grad` through
+  `fused_covariance_loss` composes with any optimizer, and the user
+  tower's chain rule continues from the returned h cotangent.
+* `ops.py` — jit'd wrappers (`snis_covgrad_fused`, `snis_scores_fused`,
+  `snis_covgrad_bwd`); `ref.py` — pure-jnp twins, the ground truth.
+
+Dispatch: `FOPOConfig(fused=True)` -> `fopo_loss` ->
+`covariance_surrogate(..., fused=True)` -> custom_vjp over these
+kernels; on CPU the trainer falls back to interpret mode automatically.
+
+HBM-traffic accounting (fp32, per step)
+=======================================
+
+unfused (jnp):  gather writes B*S*L (take), kernel chain re-reads it
+                plus 3 (B, S) operands and writes (B, L):
+                    bytes ~ 4 * (2*B*S*L + B*S*L + 4*B*S + 2*B*L)
+                the gathered tensor round-trips HBM twice (write+read)
+                on top of the unavoidable beta row reads.
+fused:          beta rows read once, straight into VMEM; scores/wbar
+                sized (B, S):
+                    bytes ~ 4 * (B*S*L + 5*B*S + 2*B*L)
+                (+ S int32 indices). Saving: ~2*B*S*L*4 bytes — at the
+                paper's B=32, S=1000, L=128 that is ~33 MB/step, ~2.9x
+                less HBM traffic (`benchmarks.roofline.snis_hbm_bytes`).
+
+The backward pass re-gathers (recompute-over-store, flash-attention
+style): +B*S*L reads only when `jax.grad` actually runs.
+"""
+from repro.kernels.snis_covgrad.backward import snis_covgrad_bwd_pallas
+from repro.kernels.snis_covgrad.kernel import snis_covgrad_fwd_pallas
+from repro.kernels.snis_covgrad.ops import (
+    snis_covgrad_bwd,
+    snis_covgrad_fused,
+    snis_scores_fused,
+)
+from repro.kernels.snis_covgrad.ref import (
+    fused_covariance_loss_ref,
+    snis_covgrad_fused_ref,
+    snis_covgrad_ref,
+)
+
+__all__ = [
+    "snis_covgrad_fused",
+    "snis_scores_fused",
+    "snis_covgrad_bwd",
+    "snis_covgrad_fwd_pallas",
+    "snis_covgrad_bwd_pallas",
+    "snis_covgrad_ref",
+    "snis_covgrad_fused_ref",
+    "fused_covariance_loss_ref",
+]

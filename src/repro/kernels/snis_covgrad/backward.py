@@ -1,0 +1,81 @@
+"""Pallas TPU backward kernel for the fused FOPO step.
+
+The surrogate loss is L = -(1/B) sum_b sum_s c_{bs} f_{bs} with the
+SNIS covariance coefficients c treated as constants (Algorithm 1
+evaluates the weights, it does not differentiate them), so
+
+    dL/df_{bs} = -(1/B) g c_{bs}          (per-sample score gradient)
+    dL/dh_b    = sum_s (dL/df_{bs}) beta_{a_bs}
+
+i.e. the backward pass is a coefficient-weighted gather-reduce over the
+same catalog rows the forward pass touched. Like the forward kernel the
+gather happens in-kernel: actions are scalar-prefetched and the beta
+BlockSpec index_map picks the (1, L) row to DMA per grid step — nothing
+(B, S, L)-shaped ever reaches HBM, and beta rows are read from HBM
+exactly once per sample.
+
+Grid: (B, S), S innermost. out[b] is a (1, L) accumulator revisited
+across the S steps (sequential reduction, "arbitrary"); batch rows
+touch disjoint output blocks, so the B axis is "parallel".
+
+Masked slots (action < 0) carry c == 0 exactly (their SNIS weight is 0)
+and are additionally skipped with pl.when, so the clamped row-0 DMA the
+index_map issues for them never contributes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+
+def _fused_bwd_kernel(
+    actions_ref,  # [B, S] int32 scalar-prefetch (SMEM)
+    coeff_ref,  # (1, 1) dL/df for sample (b, s)
+    beta_ref,  # (1, L) catalog row actions[b, s] (clamped)
+    grad_ref,  # (1, L) dL/dh_b accumulator
+):
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    @pl.when(actions_ref[b, s] >= 0)
+    def _accum():
+        grad_ref[...] += coeff_ref[0, 0] * beta_ref[...]
+
+
+def snis_covgrad_bwd_pallas(
+    coeff: jnp.ndarray,  # [B, S] per-sample score gradients dL/df
+    actions: jnp.ndarray,  # [B, S] int32 item ids; -1 marks masked slots
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings (stays in HBM)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """grad_h [B, L] = sum_s coeff[b, s] * beta[actions[b, s]]."""
+    b, s = actions.shape
+    l = beta.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, act: (i, j)),  # coeff elem
+            pl.BlockSpec((1, l), lambda i, j, act: (jnp.maximum(act[i, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, l), lambda i, j, act: (i, 0)),
+        scratch_shapes=[],
+    )
+    return pl.pallas_call(
+        _fused_bwd_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(actions, coeff, beta)

@@ -1,91 +1,159 @@
-"""Pallas TPU kernel: fused SNIS weighting + covariance-gradient reduction.
+"""Pallas TPU forward kernel: fused beta-gather + SNIS + covariance grad.
 
-Algorithm 1's per-example gradient wrt the user embedding h is
+Algorithm 1's per-example objective pieces are
 
-    g_h = sum_s  wbar_s (r_s - rbar) * beta_{a_s},
-    wbar = softmax(f_s - log q_s),   rbar = sum_s wbar_s r_s
+    f_s   = h_b . beta_{a_s}                      (sampled scores)
+    wbar  = softmax(f_s - log q_s)                (SNIS weights)
+    rbar  = sum_s wbar_s r_s
+    g_b   = sum_s wbar_s (r_s - rbar) beta_{a_s}  (covariance gradient)
 
-The jnp formulation materialises three (B, S) intermediates plus the
-(B, S, L) gathered embeddings in HBM between ops. This kernel fuses the
-whole chain per batch tile: one VMEM-resident softmax (VPU), the
-centering, and the (1, S) x (S, L) reduction on the MXU. HBM traffic
-drops from ~4 reads/writes of (B,S[,L]) to one read of each input and
-one (B, L) write.
+The jnp formulation first materialises the gathered item embeddings
+``beta[actions]`` — a (B, S, L) tensor — in HBM, then runs the chain as
+five separate ops. This kernel never lets that tensor exist: the action
+indices are a **scalar-prefetch** operand (SMEM), and the beta
+BlockSpec's index_map reads them to DMA exactly one (1, L) catalog row
+per grid step straight into VMEM (the canonical TPU sparse-gather
+pattern, same as `repro.kernels.embedding_bag`).
 
-Grid: (B_tiles,) — fully parallel. VMEM per step with TB=8, S=1024,
-L=128 (fp32): 3*(8,1024)*4 = 96KB + (8,1024,128)*4 = 4MB + out 4KB;
-fits with double buffering. S and L are padded to lane multiples by the
-wrapper; padded samples carry log_q = +inf so their weight is exactly 0.
+Grid: (B, S) — row-major, S innermost. Both axes are "arbitrary": the
+softmax over S is computed *online* (flash-attention style running max
+``m``, normaliser ``z``, and rescaled accumulators), and the scratch
+accumulators are shared across batch rows (reset at s == 0, finalised
+at s == S-1), so no grid reordering is legal.
 
-Outputs: grad_h (B, L) and wbar (B, S) (diagnostics: ESS, max-weight).
+Online covariance-gradient identity used at finalisation:
+
+    g = (A - rbar * C) / z,   A = sum_s w_s r_s beta_{a_s},
+                              C = sum_s w_s beta_{a_s},
+    w_s = exp(f_s - log q_s - m),  z = sum_s w_s,  rbar = (sum w_s r_s)/z
+
+Masked slots (action < 0, log_q = LOG_Q_PAD) gather row 0 harmlessly
+(index clamped in the index_map) and carry w = exp(-BIG - m) == 0.0
+exactly once any real slot has been seen; leading masked slots are
+annihilated retroactively by the running-max rescale (alpha == 0.0).
+
+``compute_covgrad=False`` drops every accumulator (m/z/r scratch, A/C
+vectors) and the (B, L) grad output — the custom_vjp forward pass only
+needs the sampled scores (the backward kernel regathers beta on
+demand, see `backward.py`), so the loss-only trace is a pure
+gather-dot with no per-step scalar state.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
 
-def _snis_covgrad_kernel(
-    scores_ref,  # (TB, S) f_theta(a_s, x)
-    logq_ref,  # (TB, S) log q(a_s|x); +BIG on padded slots
-    rewards_ref,  # (TB, S)
-    emb_ref,  # (TB, S, L) beta_{a_s}
-    grad_ref,  # (TB, L) out
-    wbar_ref,  # (TB, S) out
+from repro.constants import NEG_INF
+
+
+def _fused_fwd_kernel(
+    actions_ref,  # [B, S] int32 scalar-prefetch (SMEM)
+    h_ref,  # (1, L) user embedding row b
+    logq_ref,  # (1, 1) log q(a_s|x_b); LOG_Q_PAD on masked slots
+    rewards_ref,  # (1, 1)
+    beta_ref,  # (1, L) catalog row actions[b, s] (clamped), DMA'd per step
+    *refs,
+    compute_covgrad: bool,
 ):
-    logw = scores_ref[...] - logq_ref[...]  # (TB, S)
-    m = jnp.max(logw, axis=-1, keepdims=True)
-    w = jnp.exp(logw - m)
-    wsum = jnp.sum(w, axis=-1, keepdims=True)
-    wbar = w / wsum
-    r = rewards_ref[...]
-    rbar = jnp.sum(wbar * r, axis=-1, keepdims=True)
-    coeff = wbar * (r - rbar)  # (TB, S)
-    # (TB, 1, S) @ (TB, S, L) -> (TB, 1, L) batched on the MXU
-    g = jax.lax.dot_general(
-        coeff[:, None, :],
-        emb_ref[...],
-        (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
-    )
-    grad_ref[...] = g[:, 0, :]
-    wbar_ref[...] = wbar
+    if not compute_covgrad:  # loss-only trace: score + store, nothing else
+        (scores_ref,) = refs
+        scores_ref[0, 0] = jnp.sum(h_ref[0, :] * beta_ref[0, :])
+        return
+    scores_ref, grad_ref, m_ref, z_ref, r_ref, a_ref, c_ref = refs
+    s = pl.program_id(1)
+    num_s = pl.num_programs(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[0, 0] = NEG_INF
+        z_ref[0, 0] = 0.0
+        r_ref[0, 0] = 0.0
+        a_ref[...] = jnp.zeros_like(a_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    score = jnp.sum(h_ref[0, :] * beta_ref[0, :])
+    scores_ref[0, 0] = score
+
+    logw = score - logq_ref[0, 0]
+    m_old = m_ref[0, 0]
+    m_new = jnp.maximum(m_old, logw)
+    alpha = jnp.exp(m_old - m_new)  # rescale of everything accumulated so far
+    w = jnp.exp(logw - m_new)
+    r = rewards_ref[0, 0]
+    z_ref[0, 0] = z_ref[0, 0] * alpha + w
+    r_ref[0, 0] = r_ref[0, 0] * alpha + w * r
+    m_ref[0, 0] = m_new
+    a_ref[...] = a_ref[...] * alpha + (w * r) * beta_ref[...]
+    c_ref[...] = c_ref[...] * alpha + w * beta_ref[...]
+
+    @pl.when(s == num_s - 1)
+    def _finalize():
+        z = jnp.maximum(z_ref[0, 0], 1e-30)
+        rbar = r_ref[0, 0] / z
+        grad_ref[...] = (a_ref[...] - rbar * c_ref[...]) / z
 
 
-def snis_covgrad_pallas(
-    scores: jnp.ndarray,  # [B, S]
-    log_q: jnp.ndarray,  # [B, S]
+def snis_covgrad_fwd_pallas(
+    h: jnp.ndarray,  # [B, L] user embeddings
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings (stays in HBM)
+    actions: jnp.ndarray,  # [B, S] int32 item ids; -1 marks masked slots
+    log_q: jnp.ndarray,  # [B, S]; LOG_Q_PAD on masked slots
     rewards: jnp.ndarray,  # [B, S]
-    emb: jnp.ndarray,  # [B, S, L]
     *,
-    tile_batch: int = 8,
+    compute_covgrad: bool = True,
     interpret: bool = False,
 ):
-    b, s = scores.shape
-    l = emb.shape[-1]
-    assert b % tile_batch == 0
-    grid = (b // tile_batch,)
-    return pl.pallas_call(
-        _snis_covgrad_kernel,
-        grid=grid,
+    """Returns (scores [B, S], grad [B, L]) or just scores when
+    ``compute_covgrad=False``. The (B, S, L) gathered-embedding tensor
+    never exists in HBM — beta rows stream HBM -> VMEM one at a time."""
+    b, s = actions.shape
+    l = beta.shape[-1]
+    kernel = functools.partial(_fused_fwd_kernel, compute_covgrad=compute_covgrad)
+
+    out_specs = [pl.BlockSpec((1, 1), lambda i, j, act: (i, j))]  # scores
+    out_shape = [jax.ShapeDtypeStruct((b, s), jnp.float32)]
+    scratch = []  # loss-only trace carries no accumulator state at all
+    if compute_covgrad:
+        out_specs.append(pl.BlockSpec((1, l), lambda i, j, act: (i, 0)))  # grad
+        out_shape.append(jax.ShapeDtypeStruct((b, l), jnp.float32))
+        scratch += [
+            pltpu.SMEM((1, 1), jnp.float32),  # m — running max
+            pltpu.SMEM((1, 1), jnp.float32),  # z — running normaliser
+            pltpu.SMEM((1, 1), jnp.float32),  # r — running sum w*r
+            pltpu.VMEM((1, l), jnp.float32),  # A — sum w*r*beta
+            pltpu.VMEM((1, l), jnp.float32),  # C — sum w*beta
+        ]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, s),
         in_specs=[
-            pl.BlockSpec((tile_batch, s), lambda i: (i, 0)),
-            pl.BlockSpec((tile_batch, s), lambda i: (i, 0)),
-            pl.BlockSpec((tile_batch, s), lambda i: (i, 0)),
-            pl.BlockSpec((tile_batch, s, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i, j, act: (i, 0)),  # h row (resident)
+            pl.BlockSpec((1, 1), lambda i, j, act: (i, j)),  # log_q elem
+            pl.BlockSpec((1, 1), lambda i, j, act: (i, j)),  # reward elem
+            # the gather: which catalog row to DMA is data-dependent via
+            # the prefetched actions (clamped so masked -1 never DMAs OOB)
+            pl.BlockSpec((1, l), lambda i, j, act: (jnp.maximum(act[i, j], 0), 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((tile_batch, l), lambda i: (i, 0)),
-            pl.BlockSpec((tile_batch, s), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, l), jnp.float32),
-            jax.ShapeDtypeStruct((b, s), jnp.float32),
-        ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
         ),
         interpret=interpret,
-    )(scores, log_q, rewards, emb)
+    )(actions, h, log_q, rewards, beta)
+    if compute_covgrad:
+        scores, grad = out
+        return scores, grad
+    return out[0]

@@ -1,8 +1,11 @@
-"""jit'd public wrapper for the fused SNIS covariance-gradient kernel.
+"""jit'd public wrappers for the fused SNIS covariance-gradient kernels.
 
-Pads B to the batch tile and S/L to lane-friendly multiples. Padded
-sample slots get log_q = +BIG so exp(f - log_q) = 0 — they contribute
-nothing to the softmax, the centering, or the reduction.
+No shape padding is required here: the (B, S) grid indexes rows/samples
+directly and the gather DMAs whole (1, L) catalog rows (Mosaic pads the
+lane dimension of a block internally). Masking is by *value*: callers
+mark dead sample slots with ``action = -1`` and ``log_q = LOG_Q_PAD``,
+which carries exactly zero SNIS weight through the whole chain (see
+`repro.constants`).
 """
 from __future__ import annotations
 
@@ -11,41 +14,75 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.snis_covgrad.kernel import snis_covgrad_pallas
-
-_BIG = 3.0e38
-
-
-def _pad_axis(x, mult, axis, value=0.0):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+from repro.kernels.snis_covgrad.backward import snis_covgrad_bwd_pallas
+from repro.kernels.snis_covgrad.kernel import snis_covgrad_fwd_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("tile_batch", "interpret"))
-def snis_covgrad(
-    scores: jnp.ndarray,  # [B, S]
-    log_q: jnp.ndarray,  # [B, S]
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def snis_covgrad_fused(
+    h: jnp.ndarray,  # [B, L] user embeddings
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings
+    actions: jnp.ndarray,  # [B, S] int32 item ids; -1 marks masked slots
+    log_q: jnp.ndarray,  # [B, S]; LOG_Q_PAD on masked slots
     rewards: jnp.ndarray,  # [B, S]
-    emb: jnp.ndarray,  # [B, S, L]
     *,
-    tile_batch: int = 8,
     interpret: bool = True,
 ):
-    b, s = scores.shape
-    l = emb.shape[-1]
-    sp = _pad_axis(scores, 128, 1)
-    lq = _pad_axis(log_q, 128, 1, value=_BIG)  # zero-weight padding
-    rw = _pad_axis(rewards, 128, 1)
-    em = _pad_axis(_pad_axis(emb, 128, 1), 128, 2)
-    sp = _pad_axis(sp, tile_batch, 0)
-    lq = _pad_axis(lq, tile_batch, 0, value=_BIG)
-    rw = _pad_axis(rw, tile_batch, 0)
-    em = _pad_axis(em, tile_batch, 0)
-    grad, wbar = snis_covgrad_pallas(
-        sp, lq, rw, em, tile_batch=tile_batch, interpret=interpret
+    """Fully fused primal op: in-kernel gather + SNIS + covariance grad.
+
+    Returns (grad [B, L], wbar [B, S], scores [B, S]). The SNIS weights
+    are recovered from the kernel's sampled scores with one elementwise
+    (B, S) softmax — identical math to the kernel's online normaliser.
+    """
+    scores, grad = snis_covgrad_fwd_pallas(
+        h.astype(jnp.float32),
+        beta.astype(jnp.float32),
+        actions.astype(jnp.int32),
+        log_q.astype(jnp.float32),
+        rewards.astype(jnp.float32),
+        compute_covgrad=True,
+        interpret=interpret,
     )
-    return grad[:b, :l], wbar[:b, :s]
+    wbar = jax.nn.softmax(scores - log_q, axis=-1)
+    return grad, wbar, scores
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def snis_scores_fused(
+    h: jnp.ndarray,
+    beta: jnp.ndarray,
+    actions: jnp.ndarray,
+    log_q: jnp.ndarray,
+    rewards: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Loss-only forward: sampled scores [B, S] with in-kernel gather,
+    skipping the covariance-gradient accumulators (custom_vjp fwd)."""
+    return snis_covgrad_fwd_pallas(
+        h.astype(jnp.float32),
+        beta.astype(jnp.float32),
+        actions.astype(jnp.int32),
+        log_q.astype(jnp.float32),
+        rewards.astype(jnp.float32),
+        compute_covgrad=False,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def snis_covgrad_bwd(
+    coeff: jnp.ndarray,  # [B, S] per-sample score gradients dL/df
+    actions: jnp.ndarray,  # [B, S] int32
+    beta: jnp.ndarray,  # [P, L]
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """grad_h [B, L] = sum_s coeff[b, s] beta[actions[b, s]] — the
+    backward gather-reduce (see backward.py)."""
+    return snis_covgrad_bwd_pallas(
+        coeff.astype(jnp.float32),
+        actions.astype(jnp.int32),
+        beta.astype(jnp.float32),
+        interpret=interpret,
+    )

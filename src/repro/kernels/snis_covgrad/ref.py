@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for the fused SNIS covariance-gradient kernel."""
+"""Pure-jnp oracles for the fused SNIS covariance-gradient kernels.
+
+`snis_covgrad_ref` is the original pre-gathered formulation (takes the
+(B, S, L) embedding tensor the fused path refuses to materialise) and
+stays the mathematical ground truth. `snis_covgrad_fused_ref` and
+`fused_covariance_loss_ref` are the jnp twins of the gather-fused
+forward kernel and of the custom_vjp loss — same signatures as the
+Pallas wrappers, used for parity tests and CPU benchmarking.
+"""
 from __future__ import annotations
 
 import jax
@@ -17,3 +25,42 @@ def snis_covgrad_ref(
     coeff = wbar * (rewards - rbar)
     grad = jnp.einsum("bs,bsl->bl", coeff, emb)
     return grad, wbar
+
+
+def snis_covgrad_fused_ref(
+    h: jnp.ndarray,  # [B, L]
+    beta: jnp.ndarray,  # [P, L]
+    actions: jnp.ndarray,  # [B, S] int32; -1 marks masked slots
+    log_q: jnp.ndarray,  # [B, S]; LOG_Q_PAD on masked slots
+    rewards: jnp.ndarray,  # [B, S]
+):
+    """Twin of the fused forward: gathers in jnp (materialising the
+    (B, S, L) tensor the kernel avoids), masked slots score 0 weight."""
+    emb = jnp.take(beta, jnp.maximum(actions, 0), axis=0)  # [B, S, L]
+    scores = jnp.einsum("bl,bsl->bs", h, emb)
+    grad, wbar = snis_covgrad_ref(scores, log_q, rewards, emb)
+    return grad, wbar, scores
+
+
+def fused_covariance_loss_ref(
+    h: jnp.ndarray,
+    beta: jnp.ndarray,
+    actions: jnp.ndarray,
+    log_q: jnp.ndarray,
+    rewards: jnp.ndarray,
+):
+    """jnp twin of the custom_vjp fused loss: differentiable wrt h with
+    stop-gradient'd SNIS coefficients — jax.grad of this is the ground
+    truth for the backward kernel."""
+    emb = jnp.take(beta, jnp.maximum(actions, 0), axis=0)
+    scores = jnp.einsum("bl,bsl->bs", h, emb)
+    wbar = jax.nn.softmax(jax.lax.stop_gradient(scores) - log_q, axis=-1)
+    rbar = jnp.sum(wbar * rewards, axis=-1, keepdims=True)
+    coeff = jax.lax.stop_gradient(wbar * (rewards - rbar))
+    loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
+    aux = {
+        "ess": jnp.mean(1.0 / jnp.maximum(jnp.sum(wbar**2, axis=-1), 1e-30)),
+        "rbar": jnp.mean(rbar[:, 0]),
+        "max_wbar": jnp.mean(jnp.max(wbar, axis=-1)),
+    }
+    return loss, aux

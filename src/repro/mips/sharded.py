@@ -16,6 +16,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import axis_size as compat_axis_size
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.mips.exact import TopK
@@ -30,7 +33,7 @@ def sharded_topk(
     block_items: int = 4096,
 ) -> TopK:
     """Call INSIDE shard_map. Returns replicated global TopK [B, K]."""
-    n = jax.lax.axis_size(axis)
+    n = compat_axis_size(axis)
     shard_id = jax.lax.axis_index(axis)
     rows = items_shard.shape[0]
     local = topk_streaming(queries, items_shard, k, block_items=block_items)
@@ -53,7 +56,7 @@ def make_sharded_topk_fn(mesh, k: int, axis: str = "model", block_items: int = 4
     row-sharded over `axis` and queries/results replicated along it."""
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(), P(axis, None)),
         out_specs=TopK(scores=P(), indices=P()),
@@ -85,7 +88,7 @@ def context_sharded_topk(
     def fn(q_, it_):
         return sharded_topk(q_, it_, k, item_axis, block_items)
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         in_specs=(P(batch_axes, None), P(item_axis, None)),
         out_specs=TopK(scores=P(batch_axes, None), indices=P(batch_axes, None)),
@@ -100,7 +103,7 @@ def sharded_gather_rows(
 ) -> jnp.ndarray:
     """Replicated gather from a row-sharded table: mask + local take + psum.
     The workhorse for sharded beta lookups and sharded embedding tables."""
-    n = jax.lax.axis_size(axis)
+    n = compat_axis_size(axis)
     shard_id = jax.lax.axis_index(axis)
     rows = table_shard.shape[0]
     local_ids = ids - shard_id * rows

@@ -12,9 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.constants import NEG_INF
 from repro.mips.exact import TopK
-
-NEG_INF = jnp.float32(-3.0e38)
 
 
 def _pad_items(items: jnp.ndarray, block_items: int):

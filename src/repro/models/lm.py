@@ -20,6 +20,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 from repro.models.attention import decode_attention, flash_attention
 from repro.models.configs_base import LMConfig
 from repro.models.layers import rms_norm, rope, softcap
@@ -134,7 +136,7 @@ def _self_attention(cfg: LMConfig, q, k_, v_, *, window):
                 logit_cap=cfg.attn_logit_softcap, interpret=True,
             )
 
-        return jax.shard_map(
+        return shard_map(
             local_u, in_specs=(spec, spec, spec), out_specs=spec,
             check_vma=False,
         )(q, k_, v_)
@@ -164,7 +166,7 @@ def _self_attention(cfg: LMConfig, q, k_, v_, *, window):
     if axes is None:
         return unfold(local(fold(q), fold(k_), fold(v_)))
     spec = P(axes, None, None, None)
-    out = jax.shard_map(
+    out = shard_map(
         local, in_specs=(spec, spec, spec), out_specs=spec, check_vma=False
     )(fold(q), fold(k_), fold(v_))
     return unfold(out)

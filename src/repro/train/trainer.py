@@ -58,10 +58,17 @@ class FOPOTrainer:
         self.cfg = cfg
         self.dataset = dataset
         p, l = dataset.item_embeddings.shape
-        if cfg.fopo.num_items == 0:
-            cfg = dataclasses.replace(
-                cfg, fopo=dataclasses.replace(cfg.fopo, num_items=p)
+        fopo_cfg = cfg.fopo
+        if fopo_cfg.num_items == 0:
+            fopo_cfg = dataclasses.replace(fopo_cfg, num_items=p)
+        if fopo_cfg.fused and fopo_cfg.fused_interpret is None:
+            # resolve the fused-kernel execution mode once, at wiring
+            # time: compiled Pallas on TPU, interpret fallback elsewhere
+            fopo_cfg = dataclasses.replace(
+                fopo_cfg, fused_interpret=jax.default_backend() != "tpu"
             )
+        if fopo_cfg is not cfg.fopo:
+            cfg = dataclasses.replace(cfg, fopo=fopo_cfg)
             self.cfg = cfg
         self.policy = SoftmaxPolicy(tower=linear_tower_apply, item_dim=l)
         key = jax.random.PRNGKey(cfg.seed)

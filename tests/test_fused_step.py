@@ -1,0 +1,150 @@
+"""The fused FOPO training step: custom_vjp parity against the jnp
+path (forward value, aux, and gradients through the user tower), and
+end-to-end training through FOPOTrainer with FOPOConfig(fused=True)
+(interpret mode on CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FOPOConfig, covariance_surrogate, fopo_loss, make_retriever
+from repro.core.fopo import _sample_mixture_traced
+from repro.core.gradients import fused_covariance_loss
+from repro.core.policy import SoftmaxPolicy, linear_tower_apply, linear_tower_init
+from repro.core.proposals import MixtureProposal
+from repro.data import SyntheticConfig, generate_sessions
+from repro.kernels.snis_covgrad import fused_covariance_loss_ref
+from repro.mips.exact import topk_exact
+from repro.train import FOPOTrainer, TrainerConfig
+
+
+def _problem(key, b=5, s=48, l=12, p=300):
+    ks = jax.random.split(key, 6)
+    beta = jax.random.normal(ks[0], (p, l))
+    x = jax.random.normal(ks[1], (b, l))
+    params = linear_tower_init(ks[2], l, l)
+    policy = SoftmaxPolicy(tower=linear_tower_apply, item_dim=l)
+    actions = jax.random.randint(ks[3], (b, s), 0, p, dtype=jnp.int32)
+    log_q = jax.random.normal(ks[4], (b, s)) - 5
+    rewards = (jax.random.uniform(ks[5], (b, s)) < 0.2).astype(jnp.float32)
+    return policy, params, x, beta, actions, log_q, rewards
+
+
+@pytest.mark.parametrize("seed,b,s,l,p", [(0, 5, 48, 12, 300), (1, 3, 91, 20, 150), (2, 8, 17, 8, 600)])
+def test_fused_vjp_matches_jnp_twin_grad(seed, b, s, l, p):
+    """jax.grad through the Pallas custom_vjp == jax.grad through the
+    pure-jnp twin, to <= 1e-5, on randomized shapes."""
+    policy, params, x, beta, actions, log_q, rewards = _problem(
+        jax.random.PRNGKey(seed), b, s, l, p
+    )
+    h = policy.user_embedding(params, x)
+
+    g = jax.grad(lambda hh: fused_covariance_loss(
+        hh, beta, actions, log_q, rewards, interpret=True)[0])(h)
+    gr = jax.grad(lambda hh: fused_covariance_loss_ref(
+        hh, beta, actions, log_q, rewards)[0])(h)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_fused_surrogate_matches_jnp_surrogate(seed):
+    """covariance_surrogate(fused=True) == covariance_surrogate(fused=False):
+    loss value, aux diagnostics, and the full user-tower parameter
+    gradient (the chain rule continues from the h cotangent)."""
+    policy, params, x, beta, actions, log_q, rewards = _problem(jax.random.PRNGKey(seed))
+
+    def loss_fused(pp):
+        return covariance_surrogate(
+            policy, pp, x, beta, actions, log_q, rewards,
+            fused=True, fused_interpret=True,
+        )
+
+    def loss_jnp(pp):
+        return covariance_surrogate(policy, pp, x, beta, actions, log_q, rewards)
+
+    (lf, auxf), gf = jax.value_and_grad(loss_fused, has_aux=True)(params)
+    (lj, auxj), gj = jax.value_and_grad(loss_jnp, has_aux=True)(params)
+    np.testing.assert_allclose(float(lf), float(lj), rtol=1e-5, atol=1e-6)
+    for k in auxj:
+        np.testing.assert_allclose(float(auxf[k]), float(auxj[k]), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gf["w"]), np.asarray(gj["w"]), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_fopo_loss_grad_matches_unfused():
+    """Whole fopo_loss (retrieval -> sampling -> fused step) under
+    jax.grad agrees with the unfused estimator at equal key."""
+    policy, params, x, beta, _, _, _ = _problem(jax.random.PRNGKey(7))
+    p = beta.shape[0]
+    rewards_dense = (jax.random.uniform(jax.random.PRNGKey(8), (x.shape[0], p)) < 0.05
+                     ).astype(jnp.float32)
+
+    def reward_fn(actions):
+        return jnp.take_along_axis(rewards_dense, actions, axis=-1)
+
+    key = jax.random.PRNGKey(9)
+    retr = make_retriever(FOPOConfig(num_items=p, retriever="exact", top_k=32))
+
+    def grad_with(fused):
+        cfg = FOPOConfig(num_items=p, num_samples=64, top_k=32, epsilon=0.6,
+                         retriever="exact", fused=fused, fused_interpret=True)
+        return jax.grad(
+            lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfg, retr)[0]
+        )(params)
+
+    gf, gj = grad_with(True), grad_with(False)
+    np.testing.assert_allclose(np.asarray(gf["w"]), np.asarray(gj["w"]), rtol=1e-5, atol=1e-5)
+
+
+def test_trainer_fused_end_to_end_matches_unfused():
+    """FOPOConfig(fused=True) trains through FOPOTrainer on CPU
+    (interpret auto-fallback) and reproduces the unfused parameter
+    trajectory step for step."""
+    data_cfg = SyntheticConfig(
+        num_items=300, num_users=200, embed_dim=16, session_len=8, seed=0
+    )
+    train_ds, _ = generate_sessions(data_cfg).split(0.85, seed=0)
+
+    def make(fused):
+        fopo = FOPOConfig(num_items=300, num_samples=32, top_k=16, epsilon=0.8,
+                          retriever="exact", fused=fused)
+        tc = TrainerConfig(estimator="fopo", fopo=fopo, batch_size=8,
+                           learning_rate=3e-3, num_steps=5, checkpoint_every=0, seed=0)
+        return FOPOTrainer(tc, train_ds)
+
+    fused = make(True)
+    assert fused.cfg.fopo.fused_interpret is True  # CPU fallback resolved
+    hist = fused.train(5)
+    assert np.all(np.isfinite(hist["loss"]))
+
+    unfused = make(False)
+    unfused.train(5)
+    np.testing.assert_allclose(
+        np.asarray(fused.params["w"]), np.asarray(unfused.params["w"]),
+        rtol=1e-4, atol=1e-6,
+    )
+
+
+def test_traced_eps_sampling_matches_float_eps():
+    """Regression for the traced-epsilon cleanup: at the same key and
+    epsilon value, the float-eps MixtureProposal path and the traced-eps
+    path draw identical actions and identical log-pmf."""
+    policy, params, x, beta, _, _, _ = _problem(jax.random.PRNGKey(11))
+    h = policy.user_embedding(params, x)
+    topk = topk_exact(h, beta, 24)
+    key = jax.random.PRNGKey(12)
+    eps = 0.5
+    s = 64
+
+    prop = MixtureProposal(beta.shape[0], eps)
+    ref = prop.sample(key, topk.indices, topk.scores, s)
+    traced = jax.jit(
+        lambda e: _sample_mixture_traced(key, topk, s, e, beta.shape[0])
+    )(jnp.float32(eps))
+
+    np.testing.assert_array_equal(np.asarray(ref.actions), np.asarray(traced.actions))
+    np.testing.assert_array_equal(np.asarray(ref.topk_slot), np.asarray(traced.topk_slot))
+    np.testing.assert_allclose(
+        np.asarray(ref.log_q), np.asarray(traced.log_q), rtol=1e-6, atol=1e-6
+    )

@@ -4,9 +4,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.constants import LOG_Q_PAD
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
 from repro.kernels.mips_topk import mips_topk, mips_topk_ref
-from repro.kernels.snis_covgrad import snis_covgrad, snis_covgrad_ref
+from repro.kernels.snis_covgrad import (
+    snis_covgrad_bwd,
+    snis_covgrad_fused,
+    snis_covgrad_fused_ref,
+    snis_covgrad_ref,
+)
 
 
 @pytest.mark.parametrize(
@@ -67,33 +73,108 @@ def test_embedding_bag_all_padding_row():
     np.testing.assert_allclose(np.asarray(out), 0.0)
 
 
+def _snis_problem(key, b, s, l, p):
+    ks = jax.random.split(key, 5)
+    h = jax.random.normal(ks[0], (b, l))
+    beta = jax.random.normal(ks[1], (p, l))
+    actions = jax.random.randint(ks[2], (b, s), 0, p, dtype=jnp.int32)
+    log_q = jax.random.normal(ks[3], (b, s)) - 5
+    rewards = (jax.random.uniform(ks[4], (b, s)) < 0.1).astype(jnp.float32)
+    return h, beta, actions, log_q, rewards
+
+
 @pytest.mark.parametrize(
-    "b,s,l", [(8, 100, 16), (5, 1000, 100), (16, 257, 33), (8, 128, 128)]
+    "b,s,l,p", [(8, 100, 16, 500), (5, 130, 100, 1000), (3, 257, 33, 2000), (8, 64, 128, 300)]
 )
-def test_snis_covgrad_matches_ref(b, s, l):
-    ks = jax.random.split(jax.random.PRNGKey(b + s), 4)
-    scores = jax.random.normal(ks[0], (b, s)) * 3
-    log_q = jax.random.normal(ks[1], (b, s)) - 5
-    rewards = (jax.random.uniform(ks[2], (b, s)) < 0.1).astype(jnp.float32)
-    emb = jax.random.normal(ks[3], (b, s, l))
-    g, w = snis_covgrad(scores, log_q, rewards, emb, interpret=True)
-    gr, wr = snis_covgrad_ref(scores, log_q, rewards, emb)
+def test_snis_covgrad_fused_matches_ref(b, s, l, p):
+    """Fused forward (in-kernel gather, interpret) vs the jnp twin that
+    materialises the gathered (B, S, L) tensor."""
+    h, beta, actions, log_q, rewards = _snis_problem(jax.random.PRNGKey(b + s), b, s, l, p)
+    g, w, sc = snis_covgrad_fused(h, beta, actions, log_q, rewards, interpret=True)
+    gr, wr, scr = snis_covgrad_fused_ref(h, beta, actions, log_q, rewards)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(scr), rtol=2e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(w), np.asarray(wr), rtol=2e-4, atol=1e-6)
 
 
-def test_snis_covgrad_padding_neutral():
-    """Padding S to a lane multiple must not change the result."""
-    ks = jax.random.split(jax.random.PRNGKey(0), 4)
-    b, s, l = 4, 97, 10  # deliberately unaligned
-    scores = jax.random.normal(ks[0], (b, s))
-    log_q = jax.random.normal(ks[1], (b, s))
-    rewards = jax.random.uniform(ks[2], (b, s))
-    emb = jax.random.normal(ks[3], (b, s, l))
-    g, w = snis_covgrad(scores, log_q, rewards, emb, interpret=True)
+def test_snis_covgrad_fused_agrees_with_pregathered_ref():
+    """The gather-fused kernel equals snis_covgrad_ref applied to the
+    explicitly gathered embeddings (the pre-fusion formulation)."""
+    b, s, l, p = 4, 97, 10, 400  # deliberately unaligned
+    h, beta, actions, log_q, rewards = _snis_problem(jax.random.PRNGKey(0), b, s, l, p)
+    emb = jnp.take(beta, actions, axis=0)
+    scores = jnp.einsum("bl,bsl->bs", h, emb)
+    g, w, _ = snis_covgrad_fused(h, beta, actions, log_q, rewards, interpret=True)
     gr, wr = snis_covgrad_ref(scores, log_q, rewards, emb)
     np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-4, atol=1e-5)
     np.testing.assert_allclose(np.sum(np.asarray(w), -1), 1.0, rtol=1e-5)
+
+
+def test_snis_covgrad_bwd_matches_einsum():
+    b, s, l, p = 5, 41, 14, 250
+    h, beta, actions, _, _ = _snis_problem(jax.random.PRNGKey(3), b, s, l, p)
+    coeff = jax.random.normal(jax.random.PRNGKey(4), (b, s))
+    g = snis_covgrad_bwd(coeff, actions, beta, interpret=True)
+    gr = jnp.einsum("bs,bsl->bl", coeff, jnp.take(beta, actions, axis=0))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-4, atol=1e-5)
+
+
+def test_snis_covgrad_bwd_skips_masked_slots():
+    """Masked slots (action=-1) must contribute nothing to dL/dh even if
+    a nonzero coefficient leaks onto them — the kernel's guard, not the
+    caller's coeff hygiene, is the contract."""
+    b, s, l, p = 4, 30, 12, 200
+    h, beta, actions, _, _ = _snis_problem(jax.random.PRNGKey(5), b, s, l, p)
+    mask = jax.random.uniform(jax.random.PRNGKey(6), (b, s)) < 0.3
+    masked_actions = jnp.where(mask, -1, actions)
+    coeff = jax.random.normal(jax.random.PRNGKey(7), (b, s))  # nonzero everywhere
+    g = snis_covgrad_bwd(coeff, masked_actions, beta, interpret=True)
+    coeff_ref = jnp.where(mask, 0.0, coeff)
+    gr = jnp.einsum("bs,bsl->bl", coeff_ref, jnp.take(beta, jnp.maximum(masked_actions, 0), axis=0))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-4, atol=1e-5)
+
+
+def test_snis_covgrad_fused_masked_slots_zero_weight():
+    """Padded sample slots (action=-1, log_q=LOG_Q_PAD) must carry
+    exactly zero weight wherever they sit in the sample axis."""
+    b, s, l, p = 3, 21, 10, 100
+    h, beta, actions, log_q, rewards = _snis_problem(jax.random.PRNGKey(1), b, s, l, p)
+    gr, wr, _ = snis_covgrad_fused_ref(h, beta, actions, log_q, rewards)
+    pad = 11
+    mask_a = jnp.full((b, pad), -1, jnp.int32)
+    mask_q = jnp.full((b, pad), LOG_Q_PAD)
+    mask_r = jnp.ones((b, pad))  # garbage rewards must not leak
+    for order in ("trailing", "leading"):
+        if order == "trailing":
+            a = jnp.concatenate([actions, mask_a], 1)
+            q = jnp.concatenate([log_q, mask_q], 1)
+            r = jnp.concatenate([rewards, mask_r], 1)
+            sl = np.s_[:, s:]
+            keep = np.s_[:, :s]
+        else:
+            a = jnp.concatenate([mask_a, actions], 1)
+            q = jnp.concatenate([mask_q, log_q], 1)
+            r = jnp.concatenate([mask_r, rewards], 1)
+            sl = np.s_[:, :pad]
+            keep = np.s_[:, pad:]
+        g, w, _ = snis_covgrad_fused(h, beta, a, q, r, interpret=True)
+        assert (np.asarray(w)[sl] == 0.0).all(), order  # exactly zero
+        np.testing.assert_allclose(np.asarray(w)[keep], np.asarray(wr), rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-4, atol=1e-5)
+
+
+def test_snis_covgrad_fused_padded_l_columns_zero():
+    """Zero-padded embedding columns must produce exactly-zero gradient
+    columns and leave the real columns untouched."""
+    b, s, l, p, lpad = 4, 33, 12, 150, 7
+    h, beta, actions, log_q, rewards = _snis_problem(jax.random.PRNGKey(2), b, s, l, p)
+    gr, wr, _ = snis_covgrad_fused_ref(h, beta, actions, log_q, rewards)
+    hp = jnp.pad(h, ((0, 0), (0, lpad)))
+    betap = jnp.pad(beta, ((0, 0), (0, lpad)))
+    g, w, _ = snis_covgrad_fused(hp, betap, actions, log_q, rewards, interpret=True)
+    assert (np.asarray(g)[:, l:] == 0.0).all()
+    np.testing.assert_allclose(np.asarray(g)[:, :l], np.asarray(gr), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), rtol=2e-4, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

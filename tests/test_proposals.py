@@ -1,5 +1,9 @@
 """Mixture proposal q_{K,eps}: pmf normalisation + sampler agreement."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

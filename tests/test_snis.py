@@ -1,5 +1,9 @@
 """Property tests for the SNIS estimator and covariance coefficients."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

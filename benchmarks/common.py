@@ -69,5 +69,11 @@ def timed_train(trainer: FOPOTrainer, steps: int) -> tuple[float, dict]:
     return time.perf_counter() - t0, hist
 
 
+# rows emitted by the currently running suite; benchmarks.run snapshots
+# and clears this around each suite to persist results/BENCH_<suite>.json
+EMITTED: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    EMITTED.append({"name": name, "us_per_call": us_per_call, "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -40,15 +40,56 @@ def snis_hbm_bytes(b: int, s: int, l: int, *, fused: bool, dtype_bytes: int = 4)
     return dtype_bytes * (gather_read + 2 * b * s * l + small)
 
 
-def fused_rows(shapes=((32, 1000, 128), (32, 1000, 64), (128, 1000, 128))) -> list[str]:
+def snis_gather_model(b: int, s: int, l: int, sample_tile: int,
+                      dtype_bytes: int = 4) -> dict:
+    """Grid/DMA model of ONE fused gather kernel pass (fwd or bwd).
+
+    HBM bytes alone hide what the sample tiling buys: the same row
+    bytes move either as B*S sequential single-row DMAs driven by B*S
+    grid steps with a scalar SMEM softmax update each (sample_tile=1,
+    the PR-1 kernels), or as B*ceil(S/TS) grid steps that each keep TS
+    row DMAs in flight and fold the tile with ONE rescale
+    (sample_tile=TS). This model counts those structural quantities;
+    `tile_utilisation` is the live fraction of gathered rows when TS
+    does not divide S (padding rows are DMA'd but carry zero weight).
+    """
+    ts = max(1, min(sample_tile, s))
+    tiles = -(-s // ts)
+    sp = tiles * ts
+    return {
+        "sample_tile": ts,
+        "gather_grid_steps": b * tiles,
+        "row_dmas": b * sp,  # one (1, L) catalog row per (padded) sample
+        "dmas_in_flight_per_step": ts,
+        "softmax_rescales": b * tiles,  # m/z/r/A/C rescale events (fwd)
+        "tile_utilisation": s / sp,
+        "gather_bytes": dtype_bytes * b * sp * l,
+    }
+
+
+def fused_rows(shapes=((32, 1000, 128), (32, 1000, 64), (128, 1000, 128)),
+               sample_tile: int = 128) -> list[tuple[str, float, str]]:
+    """(name, us_per_call, derived) rows for the fused-step HBM and
+    gather-tiling models at paper shapes."""
     out = []
     for b, s, l in shapes:
         fb = snis_hbm_bytes(b, s, l, fused=True)
         ub = snis_hbm_bytes(b, s, l, fused=False)
-        out.append(
-            f"snis_step_hbm_B{b}_S{s}_L{l},0.0,"
-            f"fused_bytes={fb};unfused_bytes={ub};saving={ub / fb:.2f}x"
-        )
+        out.append((
+            f"snis_step_hbm_B{b}_S{s}_L{l}", 0.0,
+            f"fused_bytes={fb};unfused_bytes={ub};saving={ub / fb:.2f}x",
+        ))
+        m1 = snis_gather_model(b, s, l, 1)
+        mt = snis_gather_model(b, s, l, sample_tile)
+        out.append((
+            f"snis_gather_tiling_B{b}_S{s}_L{l}_TS{mt['sample_tile']}", 0.0,
+            f"grid_steps={mt['gather_grid_steps']};"
+            f"pr1_grid_steps={m1['gather_grid_steps']};"
+            f"step_reduction={m1['gather_grid_steps'] / mt['gather_grid_steps']:.1f}x;"
+            f"inflight_dmas={mt['dmas_in_flight_per_step']};"
+            f"rescales={mt['softmax_rescales']};"
+            f"tile_util={mt['tile_utilisation']:.3f}",
+        ))
     return out
 
 
@@ -92,21 +133,25 @@ def markdown_table(mesh: str = "pod") -> str:
 
 
 def run() -> None:
-    for row in fused_rows():
-        print(row)
+    # route through benchmarks.common.emit so benchmarks.run persists
+    # these rows to results/BENCH_roofline.json like every other suite
+    from benchmarks.common import emit
+
+    for name, us, derived in fused_rows():
+        emit(name, us, derived)
     for mesh in ("pod", "multipod"):
         rows = load(mesh)
         ok = sum(1 for r in rows if r.get("ok"))
         skipped = sum(1 for r in rows if r.get("skipped"))
         failed = sum(1 for r in rows if r.get("ok") is False)
-        print(f"roofline_{mesh},0.0,ok={ok};skipped={skipped};failed={failed}")
+        emit(f"roofline_{mesh}", 0.0, f"ok={ok};skipped={skipped};failed={failed}")
         for r in rows:
             if r.get("ok"):
                 t = r["roofline"]
-                print(
-                    f"roofline_{mesh}_{r['arch']}_{r['shape']},"
-                    f"{1e6 * t['step_time_lower_bound_s']:.1f},"
-                    f"dominant={t['dominant']};frac={t['roofline_fraction']:.3f}"
+                emit(
+                    f"roofline_{mesh}_{r['arch']}_{r['shape']}",
+                    1e6 * t["step_time_lower_bound_s"],
+                    f"dominant={t['dominant']};frac={t['roofline_fraction']:.3f}",
                 )
 
 

@@ -3,16 +3,23 @@
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run rq1 rq4    # subset
 
-Prints ``name,us_per_call,derived`` CSV rows. The roofline rows are
-derived from the dry-run artifacts (results/dryrun_*.json); run
+Prints ``name,us_per_call,derived`` CSV rows AND persists every suite's
+rows to ``results/BENCH_<suite>.json`` so the perf trajectory
+accumulates across PRs (diff the JSON, not scrollback). Suites that
+write richer artifacts of their own (fused_step ->
+results/BENCH_fused_step.json) still do. The roofline rows are derived
+from the dry-run artifacts (results/dryrun_*.json); run
 ``python -m repro.launch.dryrun --all --mesh both`` first to refresh.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
 from benchmarks import (
+    common,
     fused_step,
     grad_quality,
     kernel_bench,
@@ -37,13 +44,26 @@ SUITES = {
 }
 
 
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _persist(name: str, rows: list[dict], wall_s: float) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": name, "wall_s": wall_s, "rows": rows}, f, indent=2)
+
+
 def main() -> None:
     names = sys.argv[1:] or list(SUITES)
     print("name,us_per_call,derived")
     for name in names:
+        common.EMITTED.clear()
         t0 = time.time()
         SUITES[name]()
-        print(f"_suite_{name}_wall_s,{(time.time() - t0) * 1e6:.0f},done")
+        wall = time.time() - t0
+        _persist(name, list(common.EMITTED), wall)
+        print(f"_suite_{name}_wall_s,{wall * 1e6:.0f},done")
 
 
 if __name__ == "__main__":

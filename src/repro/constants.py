@@ -19,3 +19,11 @@ from __future__ import annotations
 
 NEG_INF = -3.0e38
 LOG_Q_PAD = 3.0e38
+
+# Decision threshold for "is this slot masked": any real log-proposal
+# value is O(-log P) while masked slots carry LOG_Q_PAD, so comparing
+# against half the sentinel is unambiguous. Kernels use it to force the
+# SNIS weight of masked slots to an *exact* 0.0 even when every slot in
+# a row is masked (where the running-max rescale alone cannot help —
+# see the all-masked-row regression in tests/test_fused_step.py).
+LOG_Q_VALID_MAX = 1.5e38

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from repro.core.gradients import covariance_surrogate, reinforce_surrogate
 from repro.core.policy import SoftmaxPolicy
 from repro.core.proposals import MixtureProposal, ProposalSample, UniformProposal
+from repro.kernels.fused_sampler import fused_mixture_sample
+from repro.kernels.snis_covgrad.ops import DEFAULT_SAMPLE_TILE, resolve_sample_tile
 from repro.mips.exact import TopK, topk_exact
 
 Retriever = Callable[[jnp.ndarray, jnp.ndarray], TopK]  # (h, beta) -> TopK
@@ -41,6 +43,18 @@ class FOPOConfig:
     # mode on non-TPU backends (resolved by the trainer / surrogate).
     fused: bool = False
     fused_interpret: bool | None = None
+    # sample-tile width TS of the fused kernels: each grid step gathers
+    # TS catalog rows into a (TS, L) VMEM tile and folds them with one
+    # online-softmax rescale (S/TS grid steps instead of S). 1 selects
+    # the legacy per-sample kernels; clamped to num_samples at use.
+    sample_tile: int = DEFAULT_SAMPLE_TILE
+    # fused_sampler=True draws the eps-mixture actions with the Pallas
+    # in-kernel sampler (repro.kernels.fused_sampler): sampled ids and
+    # log-q are produced tile-aligned for the covgrad kernels instead
+    # of via a jax.random chain over (B, S, K) Gumbel tensors. Same
+    # distribution, different PRNG stream — trajectories will not be
+    # draw-for-draw identical to the jax.random sampler.
+    fused_sampler: bool = False
 
 
 def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
@@ -83,56 +97,58 @@ def fopo_loss(
     retriever: Retriever,
     epsilon: float | jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, dict]:
-    """Scalar surrogate loss whose grad is the SNIS covariance gradient."""
+    """Scalar surrogate loss whose grad is the SNIS covariance gradient.
+
+    With ``cfg.fused_sampler`` the mixture draws come from the Pallas
+    in-kernel sampler: actions/log_q arrive tile-aligned ([B, Sp] with
+    Sp a multiple of the sample tile, padded tail pre-masked) so the
+    fused covariance kernels consume them with a no-op pad. Dead slots
+    carry exactly zero weight, so the padded columns never contribute
+    to the loss, gradient, or diagnostics.
+    """
     eps = cfg.epsilon if epsilon is None else epsilon
     h = jax.lax.stop_gradient(policy.user_embedding(params, x))  # proposal side
+    tile = resolve_sample_tile(cfg.sample_tile, cfg.num_samples)
     if isinstance(eps, float) and eps >= 1.0:
         sample = UniformProposal(cfg.num_items).sample(key, x.shape[0], cfg.num_samples)
     else:
         topk = retriever(h, beta)
-        if isinstance(eps, float):
+        if cfg.fused_sampler:
+            interpret = cfg.fused_interpret
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            actions, log_q, slots = fused_mixture_sample(
+                key, topk.indices, topk.scores,
+                num_samples=cfg.num_samples, epsilon=eps,
+                num_items=cfg.num_items, sample_tile=tile,
+                interpret=interpret,
+            )
+            sample = ProposalSample(actions=actions, log_q=log_q, topk_slot=slots)
+        else:
+            # single shared implementation, float or traced epsilon alike
             prop = MixtureProposal(cfg.num_items, eps)
             sample = prop.sample(key, topk.indices, topk.scores, cfg.num_samples)
-        else:  # traced epsilon (adaptive schedule)
-            sample = _sample_mixture_traced(
-                key, topk, cfg.num_samples, eps, cfg.num_items
-            )
-    rewards = jax.lax.stop_gradient(reward_fn(sample.actions))
+    # clamp keeps reward lookups in-bounds on pre-masked (padded) slots;
+    # their reward is zeroed and their SNIS weight is exactly 0 anyway
+    valid = sample.actions >= 0
+    rewards = jax.lax.stop_gradient(
+        reward_fn(jnp.maximum(sample.actions, 0)) * valid
+    )
     loss, aux = covariance_surrogate(
         policy, params, x, beta, sample.actions, sample.log_q, rewards,
         fused=cfg.fused, fused_interpret=cfg.fused_interpret,
+        sample_tile=tile,
     )
     return loss, aux
 
 
 def _sample_mixture_traced(key, topk: TopK, s: int, eps, num_items: int):
-    """MixtureProposal.sample with a *traced* epsilon (adaptive schedule):
-    identical draws and log-pmf to the float-eps path at equal key/eps
-    (regression-tested), but eps stays a jnp scalar so it can come from
-    a schedule inside jit. Assumes 0 < eps < 1 at runtime."""
-    import jax.random as jr
-
-    batch, k = topk.indices.shape
-    k_arm, k_uni, k_kappa = jr.split(key, 3)
-    uni_arm = jr.uniform(k_arm, (batch, s)) < eps
-    uniform_draw = jr.randint(k_uni, (batch, s), 0, num_items, dtype=jnp.int32)
-    g = jr.gumbel(k_kappa, (batch, s, k), jnp.float32)
-    slot = jnp.argmax(topk.scores[:, None, :] + g, axis=-1).astype(jnp.int32)
-    kappa_draw = jnp.take_along_axis(topk.indices, slot, axis=1)
-    actions = jnp.where(uni_arm, uniform_draw, kappa_draw).astype(jnp.int32)
-    log_kappa_full = jax.nn.log_softmax(topk.scores, axis=-1)
-    hit = actions[:, :, None] == topk.indices[:, None, :]
-    in_topk = hit.any(axis=-1)
-    log_kappa = jnp.where(
-        in_topk,
-        jnp.sum(jnp.where(hit, log_kappa_full[:, None, :], 0.0), axis=-1),
-        -jnp.inf,
-    )
-    log_u = jnp.log(eps) - jnp.log(float(num_items))
-    log_mix = jnp.logaddexp(log_u, jnp.log1p(-eps) + log_kappa)
-    log_q = jnp.where(in_topk, log_mix, log_u)
-    return ProposalSample(
-        actions=actions, log_q=log_q, topk_slot=jnp.where(uni_arm, -1, slot)
+    """Deduped into `MixtureProposal` (which now accepts a traced
+    epsilon); kept as a shim because it documents the adaptive-schedule
+    entry point. Identical draws and log-pmf to the float-eps path at
+    equal key/eps (regression-tested)."""
+    return MixtureProposal(num_items, eps).sample(
+        key, topk.indices, topk.scores, s
     )
 
 

@@ -15,9 +15,12 @@ Algorithm 1's semantics (weights are evaluated, not differentiated).
 
 `covariance_surrogate(fused=True)` swaps the jnp chain for the Pallas
 custom_vjp path (`fused_covariance_loss`): forward kernel gathers beta
-in-kernel (scalar prefetch) and the backward kernel regathers for
-dL/dh, so the (B, S, L) gathered-embedding tensor never exists in HBM.
-See `repro.kernels.snis_covgrad` for the architecture.
+in-kernel and the backward kernel regathers for dL/dh, so the
+(B, S, L) gathered-embedding tensor never exists in HBM. The
+``sample_tile`` knob selects the kernel tiling — TS > 1 gathers TS
+catalog rows per grid step and folds them with one online-softmax
+rescale (the fast path); 1 is the legacy per-sample tiling. See
+`repro.kernels.snis_covgrad` for the architecture.
 """
 from __future__ import annotations
 
@@ -34,6 +37,7 @@ from repro.core.snis import (
     snis_weights,
 )
 from repro.kernels.snis_covgrad import snis_covgrad_bwd, snis_scores_fused
+from repro.kernels.snis_covgrad.ops import DEFAULT_SAMPLE_TILE
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +98,7 @@ def covariance_surrogate(
     *,
     fused: bool = False,
     fused_interpret: bool | None = None,
+    sample_tile: int = DEFAULT_SAMPLE_TILE,
 ) -> tuple[jnp.ndarray, dict]:
     """Surrogate whose gradient is the SNIS covariance gradient.
 
@@ -107,17 +112,26 @@ def covariance_surrogate(
     bilinear score form f = h . beta_a (SoftmaxPolicy's contract), and
     treats beta as *fixed* (Assumption 1): its cotangent is hard zero,
     whereas the unfused path lets jax.grad differentiate wrt beta too.
-    ``fused_interpret=None`` auto-selects interpret mode off-TPU.
+    ``fused_interpret=None`` auto-selects interpret mode off-TPU;
+    ``sample_tile`` picks the kernel tiling (see module docstring).
+
+    Masked slots (``action = -1`` / ``log_q = LOG_Q_PAD``) carry exactly
+    zero weight in BOTH paths, including rows where every slot is masked
+    (those contribute an exactly-zero loss term and gradient row).
     """
     if fused:
         if fused_interpret is None:
             fused_interpret = jax.default_backend() != "tpu"
         h = policy.user_embedding(params, x)  # [B, L] differentiable
         return fused_covariance_loss(
-            h, beta, actions, log_q, rewards, interpret=fused_interpret
+            h, beta, actions, log_q, rewards,
+            interpret=fused_interpret, sample_tile=sample_tile,
         )
-    scores = policy.scores_at(params, x, beta, actions)  # [B, S] differentiable
-    w = snis_weights(jax.lax.stop_gradient(scores), log_q)
+    valid = actions >= 0
+    scores = policy.scores_at(
+        params, x, beta, jnp.maximum(actions, 0)
+    )  # [B, S] differentiable; clamp keeps masked gathers in-bounds
+    w = snis_weights(jax.lax.stop_gradient(scores), log_q, valid=valid)
     coeff = snis_covariance_coefficients(w.wbar, rewards)  # [B, S]
     coeff = jax.lax.stop_gradient(coeff)
     # maximise covariance between reward and score direction => minimise -sum
@@ -129,37 +143,44 @@ def covariance_surrogate(
 # fused Pallas path — custom_vjp over the gather-fused kernels
 # ---------------------------------------------------------------------------
 
-def _fused_loss_pieces(interpret, h, beta, actions, log_q, rewards):
+def _fused_loss_pieces(interpret, sample_tile, h, beta, actions, log_q, rewards):
     scores = snis_scores_fused(
-        h, beta, actions, log_q, rewards, interpret=interpret
+        h, beta, actions, log_q, rewards,
+        interpret=interpret, sample_tile=sample_tile,
     )  # forward kernel: in-kernel gather, no (B, S, L) in HBM
-    wbar = jax.nn.softmax(scores - log_q, axis=-1)  # exactly 0 on masked slots
+    # exactly 0 on masked slots — the explicit mask also covers rows
+    # where EVERY slot is masked (bare softmax would emit 1/S there)
+    wbar = jax.nn.softmax(scores - log_q, axis=-1) * (actions >= 0)
     coeff = snis_covariance_coefficients(wbar, rewards)
     loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
     return loss, snis_diagnostics(wbar, rewards), coeff
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _fused_covariance_loss(interpret, h, beta, actions, log_q, rewards):
-    loss, aux, _ = _fused_loss_pieces(interpret, h, beta, actions, log_q, rewards)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _fused_covariance_loss(interpret, sample_tile, h, beta, actions, log_q, rewards):
+    loss, aux, _ = _fused_loss_pieces(
+        interpret, sample_tile, h, beta, actions, log_q, rewards
+    )
     return loss, aux
 
 
-def _fused_covariance_loss_fwd(interpret, h, beta, actions, log_q, rewards):
+def _fused_covariance_loss_fwd(interpret, sample_tile, h, beta, actions, log_q, rewards):
     loss, aux, coeff = _fused_loss_pieces(
-        interpret, h, beta, actions, log_q, rewards
+        interpret, sample_tile, h, beta, actions, log_q, rewards
     )
     return (loss, aux), (coeff, actions, beta)
 
 
-def _fused_covariance_loss_bwd(interpret, res, ct):
+def _fused_covariance_loss_bwd(interpret, sample_tile, res, ct):
     coeff, actions, beta = res
     ct_loss = ct[0]  # aux cotangents are diagnostics — discarded
     batch = coeff.shape[0]
     # per-sample score gradients dL/df_{bs}; Algorithm 1 evaluates the
     # SNIS coefficients, it does not differentiate them
     g_scores = (-ct_loss / batch) * coeff
-    grad_h = snis_covgrad_bwd(g_scores, actions, beta, interpret=interpret)
+    grad_h = snis_covgrad_bwd(
+        g_scores, actions, beta, interpret=interpret, sample_tile=sample_tile
+    )
     return (
         grad_h,
         jnp.zeros_like(beta),  # fixed embeddings (Assumption 1); DCE'd
@@ -180,17 +201,22 @@ def fused_covariance_loss(
     rewards: jnp.ndarray,  # [B, S]
     *,
     interpret: bool = True,
+    sample_tile: int = DEFAULT_SAMPLE_TILE,
 ) -> tuple[jnp.ndarray, dict]:
     """The fused FOPO step: (loss, aux) with a custom VJP whose backward
     runs the Pallas gather-reduce kernel. Composes with jax.grad /
     optimizers; gradients flow to ``h`` only (the user-tower chain rule
-    continues from there).
+    continues from there). ``sample_tile`` > 1 selects the tiled kernels
+    (TS-row gather tiles per grid step — the fast path); 1 the
+    per-sample kernels. Both tilings are numerically matched.
 
     CONTRACT (Assumption 1): ``beta`` is a *fixed* embedding table — its
     cotangent is hard zero here, unlike the unfused path where jax.grad
     wrt beta returns the true scatter gradient. Do not use ``fused=True``
     to fine-tune item embeddings."""
-    return _fused_covariance_loss(interpret, h, beta, actions, log_q, rewards)
+    return _fused_covariance_loss(
+        interpret, sample_tile, h, beta, actions, log_q, rewards
+    )
 
 
 def covariance_gradient_dense_reference(

@@ -33,10 +33,18 @@ class ProposalSample(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class MixtureProposal:
-    """q_{K,eps}: eps-mixture of uniform(P) and softmax-over-top-K."""
+    """q_{K,eps}: eps-mixture of uniform(P) and softmax-over-top-K.
+
+    ``epsilon`` may be a python float OR a traced jnp scalar (adaptive
+    schedules inside jit): every op below is trace-compatible, and the
+    float path takes the identical code route, so float-vs-traced
+    parity is exact at equal key/epsilon (regression-tested). This is
+    the single mixture implementation — `fopo_loss`'s traced-eps
+    sampling and the fused sampler's ref twin both delegate here.
+    """
 
     num_items: int
-    epsilon: float
+    epsilon: float | jnp.ndarray
 
     # -- pmf -----------------------------------------------------------------
     def log_prob(
@@ -60,7 +68,10 @@ class MixtureProposal:
             -jnp.inf,
         )
         log_uniform = jnp.log(eps) - jnp.log(float(self.num_items))
-        if self.epsilon >= 1.0:
+        if isinstance(self.epsilon, float) and self.epsilon >= 1.0:
+            # degenerate uniform arm (kept as a float-only fast path;
+            # the traced route below reproduces it exactly at eps == 1
+            # since log1p(-1) + log_kappa == -inf drops the kappa arm)
             return jnp.broadcast_to(log_uniform, actions.shape)
         log_mix_topk = jnp.logaddexp(log_uniform, jnp.log1p(-eps) + log_kappa)
         return jnp.where(in_topk, log_mix_topk, log_uniform)
@@ -73,7 +84,8 @@ class MixtureProposal:
         topk_scores: jnp.ndarray,  # [B, K]
         num_samples: int,
     ) -> ProposalSample:
-        """Draw S actions per context from the mixture. O(S log K)."""
+        """Draw S actions per context from the mixture. O(S log K).
+        Trace-compatible in ``self.epsilon`` (see class docstring)."""
         batch, k = topk_indices.shape
         k_arm, k_uni, k_kappa = jax.random.split(key, 3)
 

@@ -25,12 +25,34 @@ class SNISWeights(NamedTuple):
     ess: jnp.ndarray  # [B] effective sample size 1 / sum wbar^2
 
 
-def snis_weights(scores: jnp.ndarray, log_q: jnp.ndarray) -> SNISWeights:
-    """scores = f_theta(a_s, x) [B, S]; log_q = log q(a_s|x) [B, S]."""
+def snis_weights(
+    scores: jnp.ndarray,
+    log_q: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+) -> SNISWeights:
+    """scores = f_theta(a_s, x) [B, S]; log_q = log q(a_s|x) [B, S].
+
+    ``valid`` (bool [B, S], optional) marks live sample slots. Dead
+    slots already carry ~0 weight through the LOG_Q_PAD sentinel, but
+    only the explicit mask makes a row with NO live slot come out as
+    all-zero weights instead of a uniform 1/S (the softmax of a
+    constant row) — the degenerate fully-padded-row case.
+    """
     log_omega = scores - log_q
     wbar = jax.nn.softmax(log_omega, axis=-1)
-    ess = 1.0 / jnp.maximum(jnp.sum(wbar**2, axis=-1), 1e-30)
-    return SNISWeights(wbar=wbar, log_omega=log_omega, ess=ess)
+    if valid is not None:
+        wbar = wbar * valid
+    return SNISWeights(
+        wbar=wbar, log_omega=log_omega, ess=effective_sample_size(wbar)
+    )
+
+
+def effective_sample_size(wbar: jnp.ndarray) -> jnp.ndarray:
+    """1 / sum wbar^2 per row — the single ESS rule (jnp, fused and ref
+    paths all use it): a dead row (all-zero weights) reports an
+    effective sample size of 0, not the 1e30 a bare floor would give."""
+    denom = jnp.sum(wbar**2, axis=-1)
+    return jnp.where(denom > 0.0, 1.0 / jnp.maximum(denom, 1e-30), 0.0)
 
 
 def snis_expectation(wbar: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
@@ -43,10 +65,10 @@ def snis_expectation(wbar: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
 def snis_diagnostics(wbar: jnp.ndarray, rewards: jnp.ndarray) -> dict:
     """Batch-mean monitoring scalars shared by the jnp and fused paths:
     ESS, SNIS reward estimate rbar, and the max normalised weight (a
-    weight-collapse alarm). Inputs are [B, S]."""
-    ess = 1.0 / jnp.maximum(jnp.sum(wbar**2, axis=-1), 1e-30)
+    weight-collapse alarm). Inputs are [B, S]. Fully-masked rows (all
+    weights zero) contribute ESS 0 rather than poisoning the mean."""
     return {
-        "ess": jnp.mean(ess),
+        "ess": jnp.mean(effective_sample_size(wbar)),
         "rbar": jnp.mean(jnp.sum(wbar * rewards, axis=-1)),
         "max_wbar": jnp.mean(jnp.max(wbar, axis=-1)),
     }

@@ -7,6 +7,10 @@ Each kernel package ships three modules:
 """
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.fused_sampler import (
+    fused_mixture_sample,
+    fused_mixture_sample_ref,
+)
 from repro.kernels.mips_topk import mips_topk, mips_topk_ref
 from repro.kernels.snis_covgrad import (
     snis_covgrad_bwd,
@@ -24,6 +28,8 @@ __all__ = [
     "snis_covgrad_bwd",
     "snis_covgrad_fused_ref",
     "snis_covgrad_ref",
+    "fused_mixture_sample",
+    "fused_mixture_sample_ref",
     "flash_attention",
     "flash_attention_ref",
 ]

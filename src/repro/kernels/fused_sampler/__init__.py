@@ -1,0 +1,26 @@
+"""In-kernel eps-mixture sampling (Algorithm 1 step 4, fused).
+
+The mixture proposal's S draws per context — arm selection, uniform
+arm, Gumbel-argmax kappa arm over the retrieved top-K, and the
+membership log-pmf — are produced by one Pallas kernel on the same
+(B, Sp/TS) sample-tile grid as the tiled `snis_covgrad` kernels, so
+sampled ids and log-q never round-trip HBM as a separate (B, S, K)
+jax.random chain and arrive pre-padded for the covariance step.
+
+  kernel.py — pl.pallas_call sampler (counter-hash PRNG, CPU-interpretable)
+  ops.py    — jit'd wrapper (key -> seed, tile-aligned outputs)
+  ref.py    — exact hash twin + `MixtureProposal`-backed distributional ref
+"""
+from repro.kernels.fused_sampler.kernel import fused_sampler_pallas
+from repro.kernels.fused_sampler.ops import fused_mixture_sample
+from repro.kernels.fused_sampler.ref import (
+    fused_mixture_sample_ref,
+    fused_sampler_ref,
+)
+
+__all__ = [
+    "fused_mixture_sample",
+    "fused_sampler_pallas",
+    "fused_sampler_ref",
+    "fused_mixture_sample_ref",
+]

@@ -1,0 +1,105 @@
+"""jnp twins for the fused mixture sampler.
+
+Two levels of reference:
+
+* `fused_sampler_ref` — exact twin of the Pallas kernel: same
+  splitmix32 counter hash, same arm selection, same membership log-q.
+  Bit-identical actions and log-q at equal (seed, eps, topk) — the
+  parity oracle for the kernel's deterministic transformation.
+* `fused_mixture_sample_ref` — the *distributional* reference:
+  delegates to `MixtureProposal.sample` (the single shared mixture
+  implementation, `jax.random`-driven, traced-eps capable) and
+  tile-pads its output to the kernel's Sp layout. The kernel's draws
+  differ from it bit-wise (different PRNG) but must match it in
+  distribution, and the kernel's log-q must equal
+  `MixtureProposal.log_prob` at the kernel's own draws to <= 1e-6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.constants import LOG_Q_PAD
+from repro.kernels.fused_sampler.kernel import _hash_u32, _uniform01
+from repro.kernels.snis_covgrad.ops import _tile_pad
+
+
+def fused_sampler_ref(
+    seed: jnp.ndarray,
+    epsilon,
+    topk_indices: jnp.ndarray,  # [B, K]
+    topk_scores: jnp.ndarray,  # [B, K]
+    *,
+    num_samples: int,
+    num_items: int,
+    sample_tile: int,
+):
+    """Pure-jnp twin of `fused_sampler_pallas` (same hash, same draws)."""
+    b, k = topk_indices.shape
+    ts = sample_tile
+    num_j = -(-num_samples // ts)
+    sp = num_j * ts
+    seed_u = jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+    eps = jnp.asarray(epsilon, jnp.float32)
+
+    pos = jnp.arange(sp, dtype=jnp.int32)[None, :]  # [1, Sp]
+    batch_ix = jnp.arange(b, dtype=jnp.int32)[:, None]  # [B, 1]
+    live = pos < num_samples
+    ctr0 = ((batch_ix * sp + pos) * (k + 2)).astype(jnp.uint32)  # [B, Sp]
+
+    u_arm = _uniform01(seed_u, ctr0)
+    bits_uni = _hash_u32(seed_u, ctr0 + jnp.uint32(1))
+    ctr_g = ctr0[:, :, None] + jnp.uint32(2) + jnp.arange(
+        k, dtype=jnp.uint32
+    )[None, None, :]
+    u_gum = _uniform01(seed_u, ctr_g)  # [B, Sp, K]
+
+    tiny = 1e-12
+    gum = -jnp.log(-jnp.log(u_gum + tiny) + tiny)
+    slot = jnp.argmax(topk_scores[:, None, :] + gum, axis=-1).astype(jnp.int32)
+    kappa_draw = jnp.take_along_axis(topk_indices, slot, axis=1)
+    uniform_draw = (bits_uni % jnp.uint32(num_items)).astype(jnp.int32)
+    take_uniform = u_arm < eps
+    actions = jnp.where(take_uniform, uniform_draw, kappa_draw)
+
+    hit = actions[:, :, None] == topk_indices[:, None, :]
+    in_topk = hit.any(axis=-1)
+    log_kappa_full = jax.nn.log_softmax(topk_scores, axis=-1)
+    log_kappa = jnp.sum(
+        jnp.where(hit, log_kappa_full[:, None, :], 0.0), axis=-1
+    )
+    log_u = jnp.log(eps) - jnp.log(float(num_items))
+    log_q = jnp.where(
+        in_topk, jnp.logaddexp(log_u, jnp.log1p(-eps) + log_kappa), log_u
+    )
+
+    actions = jnp.where(live, actions, -1).astype(jnp.int32)
+    log_q = jnp.where(live, log_q, LOG_Q_PAD)
+    slot_out = jnp.where(live & ~take_uniform, slot, -1).astype(jnp.int32)
+    return actions, log_q, slot_out
+
+
+def fused_mixture_sample_ref(
+    key: jax.Array,
+    topk_indices: jnp.ndarray,  # [B, K]
+    topk_scores: jnp.ndarray,  # [B, K]
+    *,
+    num_samples: int,
+    epsilon,
+    num_items: int,
+    sample_tile: int,
+):
+    """Distributional ref: `MixtureProposal.sample` (the shared mixture
+    implementation) tile-padded to the kernel's Sp layout. Returns
+    (actions, log_q, topk_slot), each [B, Sp]."""
+    # local import: kernels must stay importable without repro.core
+    from repro.core.proposals import MixtureProposal
+
+    prop = MixtureProposal(num_items=num_items, epsilon=epsilon)
+    sample = prop.sample(key, topk_indices, topk_scores, num_samples)
+    sp = -(-num_samples // sample_tile) * sample_tile
+    return (
+        _tile_pad(sample.actions, sp, -1),
+        _tile_pad(sample.log_q, sp, LOG_Q_PAD),
+        _tile_pad(sample.topk_slot, sp, -1),
+    )

@@ -14,26 +14,35 @@ proposal draw s:
 Three cooperating pieces make this the *real* training path instead of
 a side-car benchmark kernel:
 
-* `kernel.py` — forward kernel, grid (B, S). Actions are a
-  scalar-prefetch operand; the beta BlockSpec index_map turns them into
-  per-step (1, L) row DMAs (HBM -> VMEM), so the (B, S, L) gathered
-  tensor never exists in HBM. The softmax is computed online
-  (flash-attention-style running max/normaliser) and the covariance
-  gradient falls out of rescaled accumulators at the last sample. A
+* `kernel.py` — forward kernels. Per-sample tiling (grid (B, S)):
+  actions are a scalar-prefetch operand and the beta BlockSpec
+  index_map turns them into per-step (1, L) row DMAs (HBM -> VMEM), so
+  the (B, S, L) gathered tensor never exists in HBM. Sample tiling
+  (grid (B, S/TS), `sample_tile=TS`): each step gathers TS catalog rows
+  with overlapped async copies into a (TS, L) VMEM tile, scores the
+  tile as one (1, TS) x (TS, L)-shaped contraction, and folds it into
+  the online softmax (flash-attention-style running max/normaliser)
+  with ONE rescale per tile — TS-fold fewer grid steps and sequential
+  scalar updates, TS DMAs in flight instead of one. The covariance
+  gradient falls out of rescaled accumulators at the last tile. A
   `compute_covgrad=False` trace emits only the sampled scores — that is
   what the custom_vjp forward uses.
-* `backward.py` — backward kernel: dL/dh_b = sum_s c_{bs} beta_{a_bs}
-  with the per-sample score gradients c = -(g/B) wbar (r - rbar) as a
-  (1, 1) operand and the same scalar-prefetch gather. Together with the
+* `backward.py` — backward kernels: dL/dh_b = sum_s c_{bs} beta_{a_bs}
+  with the per-sample score gradients c = -(g/B) wbar (r - rbar), same
+  per-sample / sample-tiled regather as the forward. Together with the
   forward this closes the custom_vjp: `jax.grad` through
   `fused_covariance_loss` composes with any optimizer, and the user
   tower's chain rule continues from the returned h cotangent.
 * `ops.py` — jit'd wrappers (`snis_covgrad_fused`, `snis_scores_fused`,
-  `snis_covgrad_bwd`); `ref.py` — pure-jnp twins, the ground truth.
+  `snis_covgrad_bwd`): tile dispatch + S-padding to a multiple of TS
+  (dead slots carry exact-zero weight, so non-dividing tails are
+  exact); `ref.py` — pure-jnp twins, the ground truth.
 
-Dispatch: `FOPOConfig(fused=True)` -> `fopo_loss` ->
-`covariance_surrogate(..., fused=True)` -> custom_vjp over these
-kernels; on CPU the trainer falls back to interpret mode automatically.
+Dispatch: `FOPOConfig(fused=True, sample_tile=TS)` -> `fopo_loss` ->
+`covariance_surrogate(..., fused=True, sample_tile=TS)` -> custom_vjp
+over these kernels; on CPU the trainer falls back to interpret mode
+automatically. `FOPOConfig(fused_sampler=True)` additionally draws the
+mixture actions tile-aligned in-kernel (`repro.kernels.fused_sampler`).
 
 HBM-traffic accounting (fp32, per step)
 =======================================
@@ -53,8 +62,14 @@ fused:          beta rows read once, straight into VMEM; scores/wbar
 The backward pass re-gathers (recompute-over-store, flash-attention
 style): +B*S*L reads only when `jax.grad` actually runs.
 """
-from repro.kernels.snis_covgrad.backward import snis_covgrad_bwd_pallas
-from repro.kernels.snis_covgrad.kernel import snis_covgrad_fwd_pallas
+from repro.kernels.snis_covgrad.backward import (
+    snis_covgrad_bwd_pallas,
+    snis_covgrad_bwd_tiled_pallas,
+)
+from repro.kernels.snis_covgrad.kernel import (
+    snis_covgrad_fwd_pallas,
+    snis_covgrad_fwd_tiled_pallas,
+)
 from repro.kernels.snis_covgrad.ops import (
     snis_covgrad_bwd,
     snis_covgrad_fused,
@@ -72,6 +87,8 @@ __all__ = [
     "snis_covgrad_bwd",
     "snis_covgrad_fwd_pallas",
     "snis_covgrad_bwd_pallas",
+    "snis_covgrad_fwd_tiled_pallas",
+    "snis_covgrad_bwd_tiled_pallas",
     "snis_covgrad_ref",
     "snis_covgrad_fused_ref",
     "fused_covariance_loss_ref",

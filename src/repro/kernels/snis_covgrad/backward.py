@@ -21,8 +21,19 @@ touch disjoint output blocks, so the B axis is "parallel".
 Masked slots (action < 0) carry c == 0 exactly (their SNIS weight is 0)
 and are additionally skipped with pl.when, so the clamped row-0 DMA the
 index_map issues for them never contributes.
+
+`snis_covgrad_bwd_tiled_pallas` is the sample-tiled variant (grid
+(B, Sp/TS)): TS catalog rows are regathered per step with overlapped
+async copies into a (TS, L) VMEM tile — mirroring the tiled forward —
+and the accumulate becomes one (1, TS) x (TS, L) matmul-shaped
+contraction per tile instead of TS scalar-weighted row adds. Masked
+lanes are zeroed structurally (coeff lane forced to 0 when the
+prefetched action id is negative), so arbitrary caller coefficients on
+dead slots never contribute, same contract as the per-sample kernel.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +83,86 @@ def snis_covgrad_bwd_pallas(
     )
     return pl.pallas_call(
         _fused_bwd_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(actions, coeff, beta)
+
+
+# ---------------------------------------------------------------------------
+# sample-tiled variant — TS-row regather + one contraction per grid step
+# ---------------------------------------------------------------------------
+
+def _fused_bwd_tiled_kernel(
+    actions_ref,  # [B, Sp] int32 scalar-prefetch (SMEM), Sp % TS == 0
+    coeff_ref,  # (1, TS) dL/df tile
+    beta_hbm,  # [P, L] full catalog, memory_space=ANY
+    grad_ref,  # (1, L) dL/dh_b accumulator
+    beta_tile,  # (TS, L) VMEM gather tile
+    sem,  # DMA semaphore shared by the TS row copies
+    *,
+    sample_tile: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    def _row_copy(u):
+        idx = jnp.maximum(actions_ref[i, j * sample_tile + u], 0)
+        return pltpu.make_async_copy(
+            beta_hbm.at[pl.ds(idx, 1), :], beta_tile.at[pl.ds(u, 1), :], sem
+        )
+
+    for u in range(sample_tile):
+        _row_copy(u).start()
+
+    @pl.when(j == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    for u in range(sample_tile):
+        _row_copy(u).wait()
+
+    # structural masking: a lane whose action id is negative contributes
+    # exactly nothing, whatever coefficient the caller put there
+    valid = jnp.stack(
+        [actions_ref[i, j * sample_tile + u] >= 0 for u in range(sample_tile)]
+    )[None, :]  # (1, TS) bool, built from TS prefetched SMEM scalars
+    coeff = jnp.where(valid, coeff_ref[...], 0.0)  # (1, TS)
+    grad_ref[...] += jnp.dot(coeff, beta_tile[...])  # (1, TS) @ (TS, L)
+
+
+def snis_covgrad_bwd_tiled_pallas(
+    coeff: jnp.ndarray,  # [B, Sp] per-sample score gradients dL/df
+    actions: jnp.ndarray,  # [B, Sp] int32 item ids; -1 marks masked slots
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings (stays in HBM)
+    *,
+    sample_tile: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled twin of `snis_covgrad_bwd_pallas`; Sp % sample_tile == 0."""
+    b, sp = actions.shape
+    l = beta.shape[-1]
+    ts = sample_tile
+    if sp % ts:
+        raise ValueError(f"S={sp} must be padded to a multiple of TS={ts}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, sp // ts),
+        in_specs=[
+            pl.BlockSpec((1, ts), lambda i, j, act: (i, j)),  # coeff tile
+            pl.BlockSpec(memory_space=pltpu.ANY),  # full beta, DMA-gathered
+        ],
+        out_specs=pl.BlockSpec((1, l), lambda i, j, act: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((ts, l), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_bwd_tiled_kernel, sample_tile=ts),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
         compiler_params=CompilerParams(

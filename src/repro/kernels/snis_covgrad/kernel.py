@@ -1,4 +1,21 @@
-"""Pallas TPU forward kernel: fused beta-gather + SNIS + covariance grad.
+"""Pallas TPU forward kernels: fused beta-gather + SNIS + covariance grad.
+
+Two tilings of the same math live here:
+
+* `snis_covgrad_fwd_pallas` — the per-sample kernel (grid (B, S), one
+  (1, L) beta row DMA'd per step via the scalar-prefetch index_map).
+* `snis_covgrad_fwd_tiled_pallas` — the sample-tiled kernel (grid
+  (B, S/TS)): each step gathers a *tile* of TS catalog rows into a
+  (TS, L) VMEM block with explicit overlapped `make_async_copy` DMAs
+  (embedding-bag-style multi-row prefetch), scores the whole tile as
+  one (1, TS) x (TS, L) contraction, and folds it into the online
+  softmax with ONE rescale per tile instead of one per sample. TS times
+  fewer grid steps and TS in-flight row DMAs per step lift the DMA
+  engine and MXU utilisation that the per-sample kernel leaves idle.
+
+Callers pad S up to a multiple of TS (see ops.py); padded slots carry
+``action = -1`` / ``log_q = LOG_Q_PAD`` and are forced to an exact-zero
+SNIS weight in-kernel, so tails that don't divide the tile are exact.
 
 Algorithm 1's per-example objective pieces are
 
@@ -9,17 +26,17 @@ Algorithm 1's per-example objective pieces are
 
 The jnp formulation first materialises the gathered item embeddings
 ``beta[actions]`` — a (B, S, L) tensor — in HBM, then runs the chain as
-five separate ops. This kernel never lets that tensor exist: the action
-indices are a **scalar-prefetch** operand (SMEM), and the beta
-BlockSpec's index_map reads them to DMA exactly one (1, L) catalog row
-per grid step straight into VMEM (the canonical TPU sparse-gather
-pattern, same as `repro.kernels.embedding_bag`).
+five separate ops. Neither kernel lets that tensor exist: the action
+indices are a **scalar-prefetch** operand (SMEM), and either the beta
+BlockSpec's index_map (per-sample kernel) or the in-body async copies
+(tiled kernel) stream exactly the referenced catalog rows HBM -> VMEM.
 
-Grid: (B, S) — row-major, S innermost. Both axes are "arbitrary": the
-softmax over S is computed *online* (flash-attention style running max
-``m``, normaliser ``z``, and rescaled accumulators), and the scratch
-accumulators are shared across batch rows (reset at s == 0, finalised
-at s == S-1), so no grid reordering is legal.
+Grids are row-major with the sample axis innermost. Both axes are
+"arbitrary": the softmax over S is computed *online* (flash-attention
+style running max ``m``, normaliser ``z``, and rescaled accumulators),
+and the scratch accumulators are shared across batch rows (reset at the
+first sample step, finalised at the last), so no grid reordering is
+legal.
 
 Online covariance-gradient identity used at finalisation:
 
@@ -28,9 +45,12 @@ Online covariance-gradient identity used at finalisation:
     w_s = exp(f_s - log q_s - m),  z = sum_s w_s,  rbar = (sum w_s r_s)/z
 
 Masked slots (action < 0, log_q = LOG_Q_PAD) gather row 0 harmlessly
-(index clamped in the index_map) and carry w = exp(-BIG - m) == 0.0
-exactly once any real slot has been seen; leading masked slots are
-annihilated retroactively by the running-max rescale (alpha == 0.0).
+(index clamped) and their weight is forced to an *exact* 0.0 by
+comparing log_q against LOG_Q_VALID_MAX — not merely left to exp
+underflow, which breaks down when *every* slot of a row is masked (the
+running max then sits at the sentinel and each masked slot would carry
+w = exp(0) = 1). With the explicit mask a fully padded row finalises
+with z = 0 -> the 1e-30 floor, A = C = 0, and an exactly-zero grad row.
 
 ``compute_covgrad=False`` drops every accumulator (m/z/r scratch, A/C
 vectors) and the (B, L) grad output — the custom_vjp forward pass only
@@ -49,7 +69,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-from repro.constants import NEG_INF
+from repro.constants import LOG_Q_VALID_MAX, NEG_INF
 
 
 def _fused_fwd_kernel(
@@ -80,11 +100,14 @@ def _fused_fwd_kernel(
     score = jnp.sum(h_ref[0, :] * beta_ref[0, :])
     scores_ref[0, 0] = score
 
-    logw = score - logq_ref[0, 0]
+    logq = logq_ref[0, 0]
+    logw = jnp.where(logq < LOG_Q_VALID_MAX, score - logq, NEG_INF)
     m_old = m_ref[0, 0]
     m_new = jnp.maximum(m_old, logw)
     alpha = jnp.exp(m_old - m_new)  # rescale of everything accumulated so far
-    w = jnp.exp(logw - m_new)
+    # exact-zero weight on masked slots (robust to all-masked rows where
+    # m never leaves the sentinel and exp(logw - m) would be 1, not 0)
+    w = jnp.where(logq < LOG_Q_VALID_MAX, jnp.exp(logw - m_new), 0.0)
     r = rewards_ref[0, 0]
     z_ref[0, 0] = z_ref[0, 0] * alpha + w
     r_ref[0, 0] = r_ref[0, 0] * alpha + w * r
@@ -140,6 +163,149 @@ def snis_covgrad_fwd_pallas(
             # the gather: which catalog row to DMA is data-dependent via
             # the prefetched actions (clamped so masked -1 never DMAs OOB)
             pl.BlockSpec((1, l), lambda i, j, act: (jnp.maximum(act[i, j], 0), 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(actions, h, log_q, rewards, beta)
+    if compute_covgrad:
+        scores, grad = out
+        return scores, grad
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# sample-tiled variant — TS catalog rows gathered + folded per grid step
+# ---------------------------------------------------------------------------
+
+def _fused_fwd_tiled_kernel(
+    actions_ref,  # [B, Sp] int32 scalar-prefetch (SMEM), Sp % TS == 0
+    h_ref,  # (1, L) user embedding row b (resident across sample tiles)
+    logq_ref,  # (1, TS) log q tile; LOG_Q_PAD on masked slots
+    rewards_ref,  # (1, TS)
+    beta_hbm,  # [P, L] full catalog, memory_space=ANY (stays in HBM)
+    *refs,
+    sample_tile: int,
+    compute_covgrad: bool,
+):
+    if compute_covgrad:
+        (scores_ref, grad_ref, beta_tile, sem,
+         m_ref, z_ref, r_ref, a_ref, c_ref) = refs
+    else:
+        scores_ref, beta_tile, sem = refs
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    num_j = pl.num_programs(1)
+
+    # multi-row gather: TS overlapped row DMAs HBM -> VMEM tile. All
+    # copies are started before any wait so the DMA engine pipelines
+    # them (the per-sample kernel can only ever have one in flight).
+    def _row_copy(u):
+        idx = jnp.maximum(actions_ref[i, j * sample_tile + u], 0)
+        return pltpu.make_async_copy(
+            beta_hbm.at[pl.ds(idx, 1), :], beta_tile.at[pl.ds(u, 1), :], sem
+        )
+
+    for u in range(sample_tile):
+        _row_copy(u).start()
+    for u in range(sample_tile):
+        _row_copy(u).wait()
+
+    tile = beta_tile[...]  # (TS, L)
+    # all TS sampled scores as one contraction against the resident h row
+    scores = jnp.sum(tile * h_ref[...], axis=-1)[None, :]  # (1, TS)
+    scores_ref[...] = scores
+    if not compute_covgrad:
+        return
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0, 0] = NEG_INF
+        z_ref[0, 0] = 0.0
+        r_ref[0, 0] = 0.0
+        a_ref[...] = jnp.zeros_like(a_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    logq = logq_ref[...]  # (1, TS)
+    valid = logq < LOG_Q_VALID_MAX
+    logw = jnp.where(valid, scores - logq, NEG_INF)
+    m_old = m_ref[0, 0]
+    m_new = jnp.maximum(m_old, jnp.max(logw))  # ONE rescale per tile
+    alpha = jnp.exp(m_old - m_new)
+    w = jnp.where(valid, jnp.exp(logw - m_new), 0.0)  # (1, TS)
+    r = rewards_ref[...]
+    z_ref[0, 0] = z_ref[0, 0] * alpha + jnp.sum(w)
+    r_ref[0, 0] = r_ref[0, 0] * alpha + jnp.sum(w * r)
+    m_ref[0, 0] = m_new
+    # (1, TS) @ (TS, L) — matmul-shaped accumulator folds, MXU-friendly
+    a_ref[...] = a_ref[...] * alpha + jnp.dot(w * r, tile)
+    c_ref[...] = c_ref[...] * alpha + jnp.dot(w, tile)
+
+    @pl.when(j == num_j - 1)
+    def _finalize():
+        z = jnp.maximum(z_ref[0, 0], 1e-30)
+        rbar = r_ref[0, 0] / z
+        grad_ref[...] = (a_ref[...] - rbar * c_ref[...]) / z
+
+
+def snis_covgrad_fwd_tiled_pallas(
+    h: jnp.ndarray,  # [B, L] user embeddings
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings (stays in HBM)
+    actions: jnp.ndarray,  # [B, Sp] int32; -1 marks masked slots
+    log_q: jnp.ndarray,  # [B, Sp]; LOG_Q_PAD on masked slots
+    rewards: jnp.ndarray,  # [B, Sp]
+    *,
+    sample_tile: int,
+    compute_covgrad: bool = True,
+    interpret: bool = False,
+):
+    """Tiled twin of `snis_covgrad_fwd_pallas`: grid (B, Sp/TS), a
+    (TS, L) gather tile per step. Requires Sp % sample_tile == 0 (ops.py
+    pads); returns (scores [B, Sp], grad [B, L]) or just scores."""
+    b, sp = actions.shape
+    l = beta.shape[-1]
+    ts = sample_tile
+    if sp % ts:
+        raise ValueError(f"S={sp} must be padded to a multiple of TS={ts}")
+    kernel = functools.partial(
+        _fused_fwd_tiled_kernel, sample_tile=ts, compute_covgrad=compute_covgrad
+    )
+
+    out_specs = [pl.BlockSpec((1, ts), lambda i, j, act: (i, j))]  # scores
+    out_shape = [jax.ShapeDtypeStruct((b, sp), jnp.float32)]
+    scratch = [
+        pltpu.VMEM((ts, l), jnp.float32),  # gathered beta tile
+        pltpu.SemaphoreType.DMA,  # shared by the TS in-flight row copies
+    ]
+    if compute_covgrad:
+        out_specs.append(pl.BlockSpec((1, l), lambda i, j, act: (i, 0)))  # grad
+        out_shape.append(jax.ShapeDtypeStruct((b, l), jnp.float32))
+        scratch += [
+            pltpu.SMEM((1, 1), jnp.float32),  # m — running max
+            pltpu.SMEM((1, 1), jnp.float32),  # z — running normaliser
+            pltpu.SMEM((1, 1), jnp.float32),  # r — running sum w*r
+            pltpu.VMEM((1, l), jnp.float32),  # A — sum w*r*beta
+            pltpu.VMEM((1, l), jnp.float32),  # C — sum w*beta
+        ]
+        # scratch order expected by the kernel: tile, sem, m, z, r, A, C
+        # (outputs come first in *refs, then scratch in declaration order)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, sp // ts),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i, j, act: (i, 0)),  # h row (resident)
+            pl.BlockSpec((1, ts), lambda i, j, act: (i, j)),  # log_q tile
+            pl.BlockSpec((1, ts), lambda i, j, act: (i, j)),  # reward tile
+            pl.BlockSpec(memory_space=pltpu.ANY),  # full beta, gathered by DMA
         ],
         out_specs=out_specs,
         scratch_shapes=scratch,

@@ -27,6 +27,17 @@ def snis_covgrad_ref(
     return grad, wbar
 
 
+def _masked_snis_pieces(scores, log_q, rewards, actions):
+    """The masked SNIS chain both fused-path twins share: weights with
+    an *exact* 0 on dead slots — including rows where EVERY slot is
+    masked, which a bare softmax would hand uniform 1/S — then the SNIS
+    reward estimate and the covariance coefficients."""
+    wbar = jax.nn.softmax(scores - log_q, axis=-1) * (actions >= 0)
+    rbar = jnp.sum(wbar * rewards, axis=-1, keepdims=True)
+    coeff = wbar * (rewards - rbar)
+    return wbar, rbar, coeff
+
+
 def snis_covgrad_fused_ref(
     h: jnp.ndarray,  # [B, L]
     beta: jnp.ndarray,  # [P, L]
@@ -35,10 +46,12 @@ def snis_covgrad_fused_ref(
     rewards: jnp.ndarray,  # [B, S]
 ):
     """Twin of the fused forward: gathers in jnp (materialising the
-    (B, S, L) tensor the kernel avoids), masked slots score 0 weight."""
+    (B, S, L) tensor the kernel avoids), masked slots score 0 weight
+    and an all-masked row yields an exactly-zero gradient row."""
     emb = jnp.take(beta, jnp.maximum(actions, 0), axis=0)  # [B, S, L]
     scores = jnp.einsum("bl,bsl->bs", h, emb)
-    grad, wbar = snis_covgrad_ref(scores, log_q, rewards, emb)
+    wbar, _, coeff = _masked_snis_pieces(scores, log_q, rewards, actions)
+    grad = jnp.einsum("bs,bsl->bl", coeff, emb)
     return grad, wbar, scores
 
 
@@ -52,14 +65,19 @@ def fused_covariance_loss_ref(
     """jnp twin of the custom_vjp fused loss: differentiable wrt h with
     stop-gradient'd SNIS coefficients — jax.grad of this is the ground
     truth for the backward kernel."""
+    # local import: kernels stay importable without dragging repro.core
+    # in at module-import time (core imports this package)
+    from repro.core.snis import effective_sample_size
+
     emb = jnp.take(beta, jnp.maximum(actions, 0), axis=0)
     scores = jnp.einsum("bl,bsl->bs", h, emb)
-    wbar = jax.nn.softmax(jax.lax.stop_gradient(scores) - log_q, axis=-1)
-    rbar = jnp.sum(wbar * rewards, axis=-1, keepdims=True)
-    coeff = jax.lax.stop_gradient(wbar * (rewards - rbar))
+    wbar, rbar, coeff = _masked_snis_pieces(
+        jax.lax.stop_gradient(scores), log_q, rewards, actions
+    )
+    coeff = jax.lax.stop_gradient(coeff)
     loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
     aux = {
-        "ess": jnp.mean(1.0 / jnp.maximum(jnp.sum(wbar**2, axis=-1), 1e-30)),
+        "ess": jnp.mean(effective_sample_size(wbar)),
         "rbar": jnp.mean(rbar[:, 0]),
         "max_wbar": jnp.mean(jnp.max(wbar, axis=-1)),
     }

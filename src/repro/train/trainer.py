@@ -24,6 +24,7 @@ from repro.core.proposals import adaptive_epsilon
 from repro.core.rewards import make_session_reward
 from repro.data.loader import BatchLoader
 from repro.data.synthetic import SessionDataset
+from repro.kernels.snis_covgrad.ops import resolve_sample_tile
 from repro.mips.exact import topk_exact
 from repro.optim.optimizers import Optimizer, adam, clip_by_global_norm
 from repro.train import checkpoint as ckpt
@@ -61,12 +62,16 @@ class FOPOTrainer:
         fopo_cfg = cfg.fopo
         if fopo_cfg.num_items == 0:
             fopo_cfg = dataclasses.replace(fopo_cfg, num_items=p)
-        if fopo_cfg.fused and fopo_cfg.fused_interpret is None:
+        if (fopo_cfg.fused or fopo_cfg.fused_sampler) and fopo_cfg.fused_interpret is None:
             # resolve the fused-kernel execution mode once, at wiring
             # time: compiled Pallas on TPU, interpret fallback elsewhere
             fopo_cfg = dataclasses.replace(
                 fopo_cfg, fused_interpret=jax.default_backend() != "tpu"
             )
+        # resolve the kernel sample tile once, by the shared clamp rule
+        tile = resolve_sample_tile(fopo_cfg.sample_tile, fopo_cfg.num_samples)
+        if tile != fopo_cfg.sample_tile:
+            fopo_cfg = dataclasses.replace(fopo_cfg, sample_tile=tile)
         if fopo_cfg is not cfg.fopo:
             cfg = dataclasses.replace(cfg, fopo=fopo_cfg)
             self.cfg = cfg

@@ -1,0 +1,166 @@
+"""In-kernel mixture sampler: exact parity with its hash twin, log-q
+parity against the shared MixtureProposal implementation, marginal
+distribution match with the mixture pmf, tile-padding contract, and
+fopo_loss integration (fixed + traced epsilon)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constants import LOG_Q_PAD
+from repro.core import FOPOConfig, fopo_loss, make_retriever
+from repro.core.policy import SoftmaxPolicy, linear_tower_apply, linear_tower_init
+from repro.core.proposals import MixtureProposal
+from repro.kernels.fused_sampler import (
+    fused_mixture_sample,
+    fused_mixture_sample_ref,
+)
+from repro.kernels.fused_sampler.ref import fused_sampler_ref
+
+
+def _topk_problem(b=3, p=40, k=6, seed=0):
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (b, k)) * 2
+    ids = jnp.stack(
+        [jax.random.permutation(jax.random.PRNGKey(seed + 1 + i), p)[:k]
+         for i in range(b)]
+    ).astype(jnp.int32)
+    return ids, scores
+
+
+@pytest.mark.parametrize("s,ts", [(100, 16), (64, 64), (37, 8)])
+def test_kernel_matches_hash_twin_exactly(s, ts):
+    """The interpret-mode kernel and its pure-jnp hash twin are the same
+    deterministic transformation: identical actions/slots, log-q <= 1e-6."""
+    p, k = 40, 6
+    ids, scores = _topk_problem(p=p, k=k)
+    key = jax.random.PRNGKey(7)
+    acts, logq, slots = fused_mixture_sample(
+        key, ids, scores, num_samples=s, epsilon=0.4, num_items=p,
+        sample_tile=ts, interpret=True,
+    )
+    seed = jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+    ra, rq, rs = fused_sampler_ref(
+        seed, 0.4, ids, scores, num_samples=s, num_items=p, sample_tile=ts
+    )
+    np.testing.assert_array_equal(np.asarray(acts), np.asarray(ra))
+    np.testing.assert_allclose(np.asarray(logq), np.asarray(rq), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(slots), np.asarray(rs))
+
+
+@pytest.mark.parametrize("eps", [0.25, 0.8])
+def test_logq_matches_shared_mixture_ref(eps):
+    """log-q emitted by the kernel equals MixtureProposal.log_prob (the
+    single shared mixture implementation) at the kernel's own draws."""
+    p, k, s = 50, 8, 300
+    ids, scores = _topk_problem(p=p, k=k, seed=3)
+    acts, logq, _ = fused_mixture_sample(
+        jax.random.PRNGKey(11), ids, scores, num_samples=s, epsilon=eps,
+        num_items=p, sample_tile=32, interpret=True,
+    )
+    live = np.asarray(acts) >= 0
+    ref = MixtureProposal(p, eps).log_prob(jnp.maximum(acts, 0), ids, scores)
+    np.testing.assert_allclose(
+        np.asarray(logq)[live], np.asarray(ref)[live], rtol=1e-6, atol=1e-6
+    )
+
+
+def test_draw_marginals_match_mixture_pmf():
+    """Statistical acceptance: empirical marginals of the in-kernel draws
+    match the mixture pmf — i.e. the hash-PRNG sampler and
+    MixtureProposal.sample agree in distribution."""
+    p, k, eps, s = 30, 5, 0.4, 49_152
+    ids, scores = _topk_problem(b=1, p=p, k=k, seed=5)
+    acts, _, _ = fused_mixture_sample(
+        jax.random.PRNGKey(2), ids, scores, num_samples=s, epsilon=eps,
+        num_items=p, sample_tile=128, interpret=True,
+    )
+    counts = np.bincount(np.asarray(acts[0]), minlength=p) / s
+    pmf = np.exp(np.asarray(
+        MixtureProposal(p, eps).log_prob(jnp.arange(p)[None], ids, scores)[0]
+    ))
+    np.testing.assert_allclose(counts, pmf, atol=6e-3)
+    # ... and so do the jax.random draws of the shared implementation
+    ref_acts, _, _ = fused_mixture_sample_ref(
+        jax.random.PRNGKey(3), ids, scores, num_samples=s, epsilon=eps,
+        num_items=p, sample_tile=128,
+    )
+    ref_counts = np.bincount(np.asarray(ref_acts[0]), minlength=p) / s
+    np.testing.assert_allclose(ref_counts, pmf, atol=6e-3)
+
+
+def test_uniform_arm_covers_large_catalogs():
+    """The uniform arm draws from 32 hash bits mod P: catalogs beyond
+    2^24 items stay fully reachable (a float32-mantissa floor(u*P)
+    would silently truncate the id space)."""
+    p = 20_000_000  # > 2^24
+    ids, scores = _topk_problem(b=1, p=1000, k=4, seed=9)  # top-K ids < 1000
+    acts, logq, _ = fused_mixture_sample(
+        jax.random.PRNGKey(5), ids, scores, num_samples=512, epsilon=0.9,
+        num_items=p, sample_tile=64, interpret=True,
+    )
+    a = np.asarray(acts)[np.asarray(acts) >= 0]
+    assert a.max() >= (1 << 24)  # P(all 512 draws below 2^24) ~ 1e-36
+    assert a.min() >= 0 and a.max() < p
+    live = np.asarray(acts) >= 0
+    ref = MixtureProposal(p, 0.9).log_prob(jnp.maximum(acts, 0), ids, scores)
+    np.testing.assert_allclose(
+        np.asarray(logq)[live], np.asarray(ref)[live], rtol=1e-6, atol=1e-6
+    )
+
+
+def test_tile_padding_contract():
+    """Tail positions >= S come out pre-masked (action -1 / LOG_Q_PAD),
+    exactly the dead-slot convention the covgrad kernels consume."""
+    p, k, s, ts = 40, 6, 37, 16
+    ids, scores = _topk_problem(p=p, k=k)
+    acts, logq, slots = fused_mixture_sample(
+        jax.random.PRNGKey(0), ids, scores, num_samples=s, epsilon=0.5,
+        num_items=p, sample_tile=ts, interpret=True,
+    )
+    sp = -(-s // ts) * ts
+    assert acts.shape == (3, sp)
+    a = np.asarray(acts)
+    assert (a[:, s:] == -1).all()
+    assert (np.asarray(logq)[:, s:] == LOG_Q_PAD).all()
+    assert (np.asarray(slots)[:, s:] == -1).all()
+    assert (a[:, :s] >= 0).all() and (a[:, :s] < p).all()
+    # the shared-implementation ref pads the same layout
+    ra, rq, _ = fused_mixture_sample_ref(
+        jax.random.PRNGKey(0), ids, scores, num_samples=s, epsilon=0.5,
+        num_items=p, sample_tile=ts,
+    )
+    assert ra.shape == (3, sp) and (np.asarray(rq)[:, s:] == LOG_Q_PAD).all()
+
+
+@pytest.mark.parametrize("traced_eps", [False, True])
+def test_fopo_loss_with_fused_sampler(traced_eps):
+    """fopo_loss(fused=True, fused_sampler=True): finite loss, finite
+    user-tower gradient, with fixed and traced (adaptive) epsilon."""
+    p, l, b = 200, 12, 5
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    beta = jax.random.normal(ks[0], (p, l))
+    x = jax.random.normal(ks[1], (b, l))
+    params = linear_tower_init(ks[2], l, l)
+    policy = SoftmaxPolicy(tower=linear_tower_apply, item_dim=l)
+    rewards_dense = (jax.random.uniform(jax.random.PRNGKey(18), (b, p)) < 0.05
+                     ).astype(jnp.float32)
+
+    def reward_fn(actions):
+        return jnp.take_along_axis(rewards_dense, actions, axis=-1)
+
+    cfg = FOPOConfig(num_items=p, num_samples=40, top_k=16, epsilon=0.6,
+                     retriever="exact", fused=True, fused_sampler=True,
+                     fused_interpret=True, sample_tile=16)
+    retr = make_retriever(cfg)
+    key = jax.random.PRNGKey(19)
+    eps = jnp.float32(0.6) if traced_eps else None
+
+    (loss, aux), g = jax.value_and_grad(
+        lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfg, retr,
+                             epsilon=eps),
+        has_aux=True,
+    )(params)
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(g["w"])))
+    assert np.any(np.asarray(g["w"]) != 0.0)
+    assert 1.0 <= float(aux["ess"]) <= cfg.num_samples + 1e-3

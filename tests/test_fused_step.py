@@ -32,20 +32,47 @@ def _problem(key, b=5, s=48, l=12, p=300):
     return policy, params, x, beta, actions, log_q, rewards
 
 
+@pytest.mark.parametrize("sample_tile", [1, 8, 16])
 @pytest.mark.parametrize("seed,b,s,l,p", [(0, 5, 48, 12, 300), (1, 3, 91, 20, 150), (2, 8, 17, 8, 600)])
-def test_fused_vjp_matches_jnp_twin_grad(seed, b, s, l, p):
+def test_fused_vjp_matches_jnp_twin_grad(seed, b, s, l, p, sample_tile):
     """jax.grad through the Pallas custom_vjp == jax.grad through the
-    pure-jnp twin, to <= 1e-5, on randomized shapes."""
+    pure-jnp twin, to <= 1e-5, on randomized shapes — for the per-sample
+    tiling (1) and sample tiles that do NOT divide s (padded tails)."""
     policy, params, x, beta, actions, log_q, rewards = _problem(
         jax.random.PRNGKey(seed), b, s, l, p
     )
     h = policy.user_embedding(params, x)
 
     g = jax.grad(lambda hh: fused_covariance_loss(
-        hh, beta, actions, log_q, rewards, interpret=True)[0])(h)
+        hh, beta, actions, log_q, rewards,
+        interpret=True, sample_tile=sample_tile)[0])(h)
     gr = jax.grad(lambda hh: fused_covariance_loss_ref(
         hh, beta, actions, log_q, rewards)[0])(h)
     np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-5, atol=1e-5)
+
+
+def test_tiled_matches_per_sample_kernels():
+    """The sample-tiled kernels and the PR-1 per-sample kernels are the
+    same math: scores, loss, and h-gradients agree to <= 1e-6."""
+    policy, params, x, beta, actions, log_q, rewards = _problem(
+        jax.random.PRNGKey(5), b=4, s=53, l=16, p=200
+    )
+    h = policy.user_embedding(params, x)
+
+    def run(tile):
+        loss, _ = fused_covariance_loss(
+            h, beta, actions, log_q, rewards, interpret=True, sample_tile=tile
+        )
+        g = jax.grad(lambda hh: fused_covariance_loss(
+            hh, beta, actions, log_q, rewards,
+            interpret=True, sample_tile=tile)[0])(h)
+        return loss, g
+
+    loss1, g1 = run(1)
+    for tile in (8, 53, 64):
+        lt, gt = run(tile)
+        np.testing.assert_allclose(float(lt), float(loss1), rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(g1), rtol=1e-6, atol=1e-6)
 
 
 @pytest.mark.parametrize("seed", [0, 3])
@@ -72,9 +99,12 @@ def test_fused_surrogate_matches_jnp_surrogate(seed):
     np.testing.assert_allclose(np.asarray(gf["w"]), np.asarray(gj["w"]), rtol=1e-5, atol=1e-5)
 
 
-def test_fused_fopo_loss_grad_matches_unfused():
+@pytest.mark.parametrize("retriever", ["exact", "pallas", "ivf"])
+def test_fused_fopo_loss_grad_matches_unfused(retriever):
     """Whole fopo_loss (retrieval -> sampling -> fused step) under
-    jax.grad agrees with the unfused estimator at equal key."""
+    jax.grad agrees with the unfused estimator at equal key — for the
+    dense oracle retriever AND the Pallas / IVF production retrievers
+    composed with fused=True."""
     policy, params, x, beta, _, _, _ = _problem(jax.random.PRNGKey(7))
     p = beta.shape[0]
     rewards_dense = (jax.random.uniform(jax.random.PRNGKey(8), (x.shape[0], p)) < 0.05
@@ -84,17 +114,102 @@ def test_fused_fopo_loss_grad_matches_unfused():
         return jnp.take_along_axis(rewards_dense, actions, axis=-1)
 
     key = jax.random.PRNGKey(9)
-    retr = make_retriever(FOPOConfig(num_items=p, retriever="exact", top_k=32))
+    kw = {}
+    if retriever == "ivf":
+        from repro.mips.ivf import build_ivf
+
+        kw = {"index": build_ivf(jax.random.PRNGKey(3), beta, num_clusters=8),
+              "n_probe": 8}
+    retr = make_retriever(
+        FOPOConfig(num_items=p, retriever=retriever, top_k=32), **kw
+    )
 
     def grad_with(fused):
         cfg = FOPOConfig(num_items=p, num_samples=64, top_k=32, epsilon=0.6,
-                         retriever="exact", fused=fused, fused_interpret=True)
+                         retriever=retriever, fused=fused, fused_interpret=True)
         return jax.grad(
             lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfg, retr)[0]
         )(params)
 
     gf, gj = grad_with(True), grad_with(False)
     np.testing.assert_allclose(np.asarray(gf["w"]), np.asarray(gj["w"]), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_uniform_proposal_arm():
+    """eps >= 1 short-circuits to the uniform proposal; the fused path
+    must agree with the unfused estimator on those draws too."""
+    policy, params, x, beta, _, _, _ = _problem(jax.random.PRNGKey(21))
+    p = beta.shape[0]
+    rewards_dense = (jax.random.uniform(jax.random.PRNGKey(22), (x.shape[0], p)) < 0.05
+                     ).astype(jnp.float32)
+
+    def reward_fn(actions):
+        return jnp.take_along_axis(rewards_dense, actions, axis=-1)
+
+    key = jax.random.PRNGKey(23)
+    retr = make_retriever(FOPOConfig(num_items=p, retriever="exact", top_k=32))
+
+    def grad_with(fused):
+        cfg = FOPOConfig(num_items=p, num_samples=64, top_k=32, epsilon=1.0,
+                         retriever="exact", fused=fused, fused_interpret=True)
+        loss, aux = fopo_loss(policy, params, key, x, beta, reward_fn, cfg, retr)
+        g = jax.grad(
+            lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfg, retr)[0]
+        )(params)
+        return float(loss), g
+
+    (lf, gf), (lj, gj) = grad_with(True), grad_with(False)
+    np.testing.assert_allclose(lf, lj, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gf["w"]), np.asarray(gj["w"]), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sample_tile", [1, 16])
+def test_fully_masked_row_zero_grad(sample_tile):
+    """Regression: a batch row whose EVERY slot is masked must produce an
+    exactly-zero gradient row (not garbage scaled by the 1e-30 z floor)
+    in the fused kernels, the jnp twin, and the unfused surrogate."""
+    from repro.constants import LOG_Q_PAD
+
+    policy, params, x, beta, actions, log_q, rewards = _problem(
+        jax.random.PRNGKey(13), b=4, s=33, l=10, p=120
+    )
+    actions = actions.at[2, :].set(-1)
+    log_q = log_q.at[2, :].set(LOG_Q_PAD)
+    h = policy.user_embedding(params, x)
+
+    (loss, aux), g = jax.value_and_grad(
+        lambda hh: fused_covariance_loss(
+            hh, beta, actions, log_q, rewards,
+            interpret=True, sample_tile=sample_tile),
+        has_aux=True,
+    )(h)
+    assert np.isfinite(float(loss))
+    assert np.all(np.asarray(g)[2] == 0.0)
+    assert np.any(np.asarray(g)[0] != 0.0)  # live rows still learn
+    # diagnostics stay sane: the dead row reports ESS 0, not 1e30
+    assert 0.0 < float(aux["ess"]) <= actions.shape[1]
+
+    (loss_r, _), gr = jax.value_and_grad(
+        lambda hh: fused_covariance_loss_ref(hh, beta, actions, log_q, rewards),
+        has_aux=True,
+    )(h)
+    assert np.all(np.asarray(gr)[2] == 0.0)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(loss), float(loss_r), rtol=1e-5, atol=1e-7)
+
+    # unfused surrogate: same zero-contribution contract
+    (lu, _), gu = jax.value_and_grad(
+        lambda pp: covariance_surrogate(
+            policy, pp, x, beta, actions, log_q, rewards),
+        has_aux=True,
+    )(params)
+    assert np.isfinite(float(lu))
+    np.testing.assert_allclose(float(lu), float(loss), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gu["w"]), np.asarray(
+        jax.grad(lambda pp: covariance_surrogate(
+            policy, pp, x, beta, actions, log_q, rewards,
+            fused=True, fused_interpret=True, sample_tile=sample_tile)[0]
+        )(params)["w"]), rtol=1e-5, atol=1e-5)
 
 
 def test_trainer_fused_end_to_end_matches_unfused():
@@ -106,9 +221,9 @@ def test_trainer_fused_end_to_end_matches_unfused():
     )
     train_ds, _ = generate_sessions(data_cfg).split(0.85, seed=0)
 
-    def make(fused):
+    def make(fused, sample_tile=8):
         fopo = FOPOConfig(num_items=300, num_samples=32, top_k=16, epsilon=0.8,
-                          retriever="exact", fused=fused)
+                          retriever="exact", fused=fused, sample_tile=sample_tile)
         tc = TrainerConfig(estimator="fopo", fopo=fopo, batch_size=8,
                            learning_rate=3e-3, num_steps=5, checkpoint_every=0, seed=0)
         return FOPOTrainer(tc, train_ds)
@@ -124,6 +239,37 @@ def test_trainer_fused_end_to_end_matches_unfused():
         np.asarray(fused.params["w"]), np.asarray(unfused.params["w"]),
         rtol=1e-4, atol=1e-6,
     )
+
+    # a tile that does NOT divide num_samples reproduces the same
+    # multi-step trajectory (padded-tail exactness, end to end)
+    tiled = make(True, sample_tile=13)
+    tiled.train(5)
+    np.testing.assert_allclose(
+        np.asarray(tiled.params["w"]), np.asarray(unfused.params["w"]),
+        rtol=1e-4, atol=1e-6,
+    )
+
+
+def test_trainer_fused_sampler_end_to_end():
+    """FOPOConfig(fused_sampler=True) trains through FOPOTrainer on CPU:
+    different PRNG stream than jax.random (so no draw-for-draw parity),
+    but the loop must run, stay finite, and resolve its tile/interpret
+    knobs at wiring time."""
+    data_cfg = SyntheticConfig(
+        num_items=300, num_users=200, embed_dim=16, session_len=8, seed=0
+    )
+    train_ds, _ = generate_sessions(data_cfg).split(0.85, seed=0)
+    fopo = FOPOConfig(num_items=300, num_samples=50, top_k=16, epsilon=0.8,
+                      retriever="exact", fused=True, fused_sampler=True,
+                      sample_tile=16)
+    tc = TrainerConfig(estimator="fopo", fopo=fopo, batch_size=8,
+                       learning_rate=3e-3, num_steps=4, checkpoint_every=0, seed=0)
+    tr = FOPOTrainer(tc, train_ds)
+    assert tr.cfg.fopo.fused_interpret is True
+    hist = tr.train(4)
+    assert np.all(np.isfinite(hist["loss"]))
+    assert np.any(np.asarray(tr.params["w"]) != np.asarray(
+        FOPOTrainer(tc, train_ds).params["w"]))  # it actually stepped
 
 
 def test_traced_eps_sampling_matches_float_eps():

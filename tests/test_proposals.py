@@ -52,6 +52,33 @@ def test_sampler_matches_pmf():
     )
 
 
+def test_mixture_accepts_traced_epsilon():
+    """MixtureProposal is the single mixture implementation: a traced
+    jnp epsilon must go through sample/log_prob inside jit and agree
+    with the float path draw for draw and to 1e-6 in log-pmf."""
+    p, k, s = 60, 8, 64
+    key = jax.random.PRNGKey(4)
+    scores = jax.random.normal(key, (2, k))
+    ids = jnp.stack([jax.random.permutation(jax.random.PRNGKey(i), p)[:k]
+                     for i in range(2)])
+    eps = 0.35
+    ref = MixtureProposal(p, eps).sample(jax.random.PRNGKey(5), ids, scores, s)
+
+    @jax.jit
+    def traced(e):
+        prop = MixtureProposal(p, e)
+        sm = prop.sample(jax.random.PRNGKey(5), ids, scores, s)
+        return sm, prop.log_prob(sm.actions, ids, scores)
+
+    sm, lp = traced(jnp.float32(eps))
+    np.testing.assert_array_equal(np.asarray(ref.actions), np.asarray(sm.actions))
+    np.testing.assert_array_equal(np.asarray(ref.topk_slot), np.asarray(sm.topk_slot))
+    np.testing.assert_allclose(np.asarray(ref.log_q), np.asarray(sm.log_q),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ref.log_q), np.asarray(lp),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_uniform_proposal():
     prop = UniformProposal(num_items=100)
     sample = prop.sample(jax.random.PRNGKey(0), 4, 1000)

@@ -67,6 +67,58 @@ def snis_gather_model(b: int, s: int, l: int, sample_tile: int,
     }
 
 
+def dist_comms_model(
+    b: int, s: int, k: int, l: int, p: int, n_model: int,
+    *, dtype_bytes: int = 4, hbm_bw: float = 819e9, ici_bw: float = 50e9,
+) -> dict:
+    """Comms/HBM model of ONE multi-device fused FOPO step per
+    data-replica (b = global batch / n_data), vs keeping beta
+    replicated on every device.
+
+    Sharding beta's rows over `n_model` devices costs four collectives
+    (ring-modelled: a device moves (n-1)/n of the gathered bytes, 2x
+    for all-reduce):
+      * retrieval candidate merge — all-gather of [n, b, K] scores+ids,
+      * id routing             — all-gather of the (b, S) id tensor
+                                 (+ the kernel's log_q/reward operands),
+      * score reduction        — ONE psum of the (b, S) partials,
+      * grad reduction         — psum of the (b, L) grad_h partials.
+    What it buys: per-device beta residency and per-step gather traffic
+    drop n_model-fold — the terms that cap the catalog on one device.
+    The `*_s` estimates use the roofline bandwidths above; `advantage`
+    is replicated-path HBM gather time over sharded-path (gather +
+    comms) time — the catalog-scaling headroom at these shapes.
+    """
+    ring = (n_model - 1) / max(n_model, 1)
+    retrieval = ring * n_model * b * k * 2 * dtype_bytes  # scores + ids
+    ids = ring * b * s * 3 * dtype_bytes  # actions + log_q + rewards
+    score_psum = 2 * ring * b * s * dtype_bytes
+    grad_psum = 2 * ring * b * l * dtype_bytes
+    comms = retrieval + ids + score_psum + grad_psum
+    beta_replicated = p * l * dtype_bytes
+    beta_sharded = beta_replicated // n_model
+    # per-step beta row reads (fwd gather + bwd regather)
+    gather_replicated = 2 * b * s * l * dtype_bytes
+    gather_sharded = gather_replicated // n_model  # owned rows only
+    t_repl = gather_replicated / hbm_bw
+    t_shard = gather_sharded / hbm_bw + comms / ici_bw
+    return {
+        "n_model": n_model,
+        "comms_bytes": int(comms),
+        "retrieval_allgather_bytes": int(retrieval),
+        "id_allgather_bytes": int(ids),
+        "score_psum_bytes": int(score_psum),
+        "grad_psum_bytes": int(grad_psum),
+        "beta_hbm_replicated_bytes": int(beta_replicated),
+        "beta_hbm_sharded_bytes": int(beta_sharded),
+        "gather_hbm_replicated_bytes": int(gather_replicated),
+        "gather_hbm_sharded_bytes": int(gather_sharded),
+        "replicated_step_s": t_repl,
+        "sharded_step_s": t_shard,
+        "advantage": t_repl / t_shard if t_shard else float("inf"),
+    }
+
+
 def fused_rows(shapes=((32, 1000, 128), (32, 1000, 64), (128, 1000, 128)),
                sample_tile: int = 128) -> list[tuple[str, float, str]]:
     """(name, us_per_call, derived) rows for the fused-step HBM and

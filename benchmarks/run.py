@@ -20,6 +20,7 @@ import time
 
 from benchmarks import (
     common,
+    dist_step,
     fused_step,
     grad_quality,
     kernel_bench,
@@ -40,6 +41,7 @@ SUITES = {
     "gradq": grad_quality.run,
     "kernels": kernel_bench.run,
     "fused": fused_step.run,  # emits results/BENCH_fused_step.json
+    "dist_step": dist_step.run,  # multi-device step (subprocess 4-dev mesh)
     "roofline": roofline.run,
 }
 

@@ -9,6 +9,7 @@ pinned toolchain and on newer jax. Kernel-side shims live in
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -18,11 +19,40 @@ if hasattr(jax, "shard_map"):
 else:  # pre-0.5 toolchain
     from jax.experimental.shard_map import shard_map as _shard_map
 
+    def _context_mesh():
+        """The mesh installed by ``with mesh:`` / ``set_mesh`` — pre-0.5
+        shard_map has no ambient-mesh support, so resolve it from the
+        classic thread-resources slot when the caller omitted ``mesh``."""
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty:
+            raise ValueError(
+                "shard_map called without a mesh and no mesh context is "
+                "active; wrap the call in `with mesh:` (or repro.compat."
+                "set_mesh) or pass mesh= explicitly"
+            )
+        return mesh
+
     @functools.wraps(_shard_map)
     def shard_map(*args, **kwargs):
         if "check_vma" in kwargs:
             kwargs["check_rep"] = kwargs.pop("check_vma")
+        if len(args) < 2 and kwargs.get("mesh") is None:
+            kwargs["mesh"] = _context_mesh()
         return _shard_map(*args, **kwargs)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        """``jax.set_mesh`` shim: the Mesh context manager sets the same
+        thread-local slot on the pre-0.5 toolchain."""
+        with mesh:
+            yield
 
 
 def axis_size(name):
@@ -33,4 +63,4 @@ def axis_size(name):
     return jax.lax.psum(1, name)
 
 
-__all__ = ["shard_map", "axis_size"]
+__all__ = ["shard_map", "axis_size", "set_mesh"]

@@ -15,7 +15,7 @@ index (sublinear), or the sharded multi-device retriever (big catalogs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,14 @@ class FOPOConfig:
     # distribution, different PRNG stream — trajectories will not be
     # draw-for-draw identical to the jax.random sampler.
     fused_sampler: bool = False
+    # dist=DistConfig(mesh, ...) routes the whole step through the
+    # multi-device path (repro.dist.fopo): beta rows sharded over the
+    # mesh `model` axis, batch over `data`, retrieval via the sharded
+    # top-K merge, and the sample-tiled fused kernels running per
+    # device with the SNIS score partials psum'd exactly once. Implies
+    # the fused kernels (the `fused` flag is moot on this path); not
+    # combinable with fused_sampler (yet — see ROADMAP).
+    dist: Any = None
 
 
 def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
@@ -106,6 +114,16 @@ def fopo_loss(
     carry exactly zero weight, so the padded columns never contribute
     to the loss, gradient, or diagnostics.
     """
+    if cfg.dist is not None:
+        # the multi-device path owns retrieval/sampling/step wiring;
+        # retriever=None selects its sharded top-K (injected retrievers
+        # pass through for tests)
+        from repro.dist.fopo import dist_fopo_loss
+
+        return dist_fopo_loss(
+            policy, params, key, x, beta, reward_fn, cfg,
+            retriever=retriever, epsilon=epsilon,
+        )
     eps = cfg.epsilon if epsilon is None else epsilon
     h = jax.lax.stop_gradient(policy.user_embedding(params, x))  # proposal side
     tile = resolve_sample_tile(cfg.sample_tile, cfg.num_samples)

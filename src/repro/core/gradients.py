@@ -99,6 +99,7 @@ def covariance_surrogate(
     fused: bool = False,
     fused_interpret: bool | None = None,
     sample_tile: int = DEFAULT_SAMPLE_TILE,
+    dist=None,
 ) -> tuple[jnp.ndarray, dict]:
     """Surrogate whose gradient is the SNIS covariance gradient.
 
@@ -114,11 +115,26 @@ def covariance_surrogate(
     whereas the unfused path lets jax.grad differentiate wrt beta too.
     ``fused_interpret=None`` auto-selects interpret mode off-TPU;
     ``sample_tile`` picks the kernel tiling (see module docstring).
+    ``dist=DistConfig(...)`` selects the multi-device twin instead
+    (`repro.dist.fopo`): same fused kernels per beta shard, SNIS score
+    partials psum'd once — same contract, catalog sharded over the mesh.
 
     Masked slots (``action = -1`` / ``log_q = LOG_Q_PAD``) carry exactly
     zero weight in BOTH paths, including rows where every slot is masked
     (those contribute an exactly-zero loss term and gradient row).
     """
+    if dist is not None:
+        # multi-device twin: same contract as fused=True (beta fixed,
+        # gradients to h only), kernels running per beta shard
+        from repro.dist.fopo import dist_fused_covariance_loss
+
+        if fused_interpret is None:
+            fused_interpret = jax.default_backend() != "tpu"
+        h = policy.user_embedding(params, x)
+        return dist_fused_covariance_loss(
+            h, beta, actions, log_q, rewards,
+            dist=dist, interpret=fused_interpret, sample_tile=sample_tile,
+        )
     if fused:
         if fused_interpret is None:
             fused_interpret = jax.default_backend() != "tpu"

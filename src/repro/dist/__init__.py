@@ -1,0 +1,49 @@
+"""repro.dist — the distributed-execution subsystem.
+
+Two layers:
+
+* `repro.dist.sharding` — the *static* layer: the production mesh-axis
+  table (`AXIS_SIZES`) and the PartitionSpec-tree builders
+  (`lm_param_specs`, `lm_cache_specs`, `gnn_param_specs`,
+  `recsys_param_specs`) that `launch/specs.py` zips against abstract
+  args to build cell programs for the dry-run and the launcher.
+* `repro.dist.fopo` + `repro.dist.collectives` — the *dynamic* layer:
+  the shard_map multi-device fused FOPO training step (beta rows
+  sharded over the mesh `model` axis, sampled-id routing with local-id
+  rebasing, one psum of the SNIS score partials) and the collective
+  building blocks it is made of.
+
+`sharding` is dependency-light (jax.sharding only) and safe to import
+everywhere; `fopo` pulls in the Pallas kernel stack, so the heavy
+exports resolve lazily.
+"""
+from __future__ import annotations
+
+from repro.dist.sharding import (
+    AXIS_SIZES,
+    axis_product,
+    gnn_param_specs,
+    lm_cache_specs,
+    lm_param_specs,
+    recsys_param_specs,
+)
+
+__all__ = [
+    "AXIS_SIZES",
+    "axis_product",
+    "gnn_param_specs",
+    "lm_cache_specs",
+    "lm_param_specs",
+    "recsys_param_specs",
+    "DistConfig",
+    "dist_fopo_loss",
+    "dist_fused_covariance_loss",
+]
+
+
+def __getattr__(name):  # lazy: avoid importing the kernel stack on spec-only use
+    if name in ("DistConfig", "dist_fopo_loss", "dist_fused_covariance_loss"):
+        from repro.dist import fopo as _fopo
+
+        return getattr(_fopo, name)
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

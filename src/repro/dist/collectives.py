@@ -1,0 +1,97 @@
+"""Collective building blocks of the multi-device FOPO step.
+
+Everything here runs INSIDE shard_map (per-device code operating on
+local shards, communicating through named mesh axes). The pieces:
+
+* `rebase_ids` — global sampled-action ids -> (local row ids, ownership
+  mask) against this device's contiguous beta row range. Foreign ids
+  become ``-1``, the covgrad kernels' dead-slot sentinel, so a shard
+  scores/accumulates exactly its own rows and contributes exact zeros
+  everywhere else (that is what makes the cross-shard psum *exact*:
+  each slot receives its owner's value plus hard zeros).
+* `gather_samples` — the id-routing collective: all-gather of
+  sample-sharded (B, S/n) tensors back to the full (B, S) sample set
+  along the `model` axis (the (B, S) int32 id tensor plus the kernel's
+  log_q/reward operands). The alternative all-to-all formulation moves
+  the same bytes but lands ids pre-bucketed per owner; with the
+  gather + rebase scheme the bucketing is the (free) masking above, so
+  we keep the simpler collective. A remote-DMA in-kernel gather (ids
+  stay put, beta rows fly) is the TPU follow-on tracked in ROADMAP.md.
+* `psum_scores` — THE one reduction of the per-shard SNIS score
+  partials. After it, every device on the `model` axis holds the full
+  sampled-score matrix for its batch rows, and the SNIS normaliser
+  (softmax over S) is computed locally — it is never reduced again.
+
+Padding helpers (`pad_rows`, `pad_samples`) live here too: shard_map
+needs even shards, so ragged catalogs pad beta with zero rows that no
+real id ever addresses, and ragged sample counts pad with dead slots
+(action -1 / LOG_Q_PAD / reward 0) that carry exactly zero weight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.constants import LOG_Q_PAD
+
+
+def padded_len(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def pad_rows(table: jnp.ndarray, mult: int) -> jnp.ndarray:
+    """Zero-pad a [P, L] table to P % mult == 0 (ragged catalogs). The
+    pad rows are unaddressable: every real id is < P."""
+    p = table.shape[0]
+    pp = padded_len(p, mult)
+    if pp == p:
+        return table
+    return jnp.concatenate(
+        [table, jnp.zeros((pp - p,) + table.shape[1:], table.dtype)], axis=0
+    )
+
+
+def pad_samples(
+    actions: jnp.ndarray, log_q: jnp.ndarray, rewards: jnp.ndarray, mult: int
+):
+    """Pad the sample dim of (B, S) tensors to S % mult == 0 with dead
+    slots — the kernels' exact-zero-weight contract makes them inert."""
+    b, s = actions.shape
+    sp = padded_len(s, mult)
+    if sp == s:
+        return actions, log_q, rewards
+
+    def pad(x, fill):
+        return jnp.concatenate(
+            [x, jnp.full((b, sp - s), fill, x.dtype)], axis=1
+        )
+
+    return pad(actions, -1), pad(log_q, LOG_Q_PAD), pad(rewards, 0.0)
+
+
+def rebase_ids(ids: jnp.ndarray, rows: int, axis: str):
+    """Global ids -> (local ids, owned mask) for this shard's contiguous
+    row range [shard_id * rows, (shard_id + 1) * rows). Foreign and
+    already-masked (< 0) ids map to -1, the kernels' dead-slot value.
+    Call inside shard_map."""
+    shard_id = jax.lax.axis_index(axis)
+    local = ids - shard_id * rows
+    owned = (ids >= 0) & (local >= 0) & (local < rows)
+    return jnp.where(owned, local, -1).astype(jnp.int32), owned
+
+
+def gather_samples(axis: str, *tensors: jnp.ndarray):
+    """Route sample-sharded (B, S/n) tensors to every shard on `axis`:
+    tiled all-gather along the sample dim, restoring the global (B, S)
+    column order. Call inside shard_map."""
+    return tuple(
+        jax.lax.all_gather(t, axis, axis=1, tiled=True) for t in tensors
+    )
+
+
+def psum_scores(partials: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """The single cross-shard reduction of the fused dist step: sum the
+    per-shard sampled-score partials (owner value + exact zeros) over
+    the `model` axis. The SNIS normaliser is derived from the result
+    locally and never reduced again. Call inside shard_map."""
+    return jax.lax.psum(partials, axis)

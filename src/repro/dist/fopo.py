@@ -1,0 +1,444 @@
+"""The multi-device fused FOPO training step.
+
+Single-device FOPO (repro.core) caps the catalog at one device's HBM:
+beta [P, L] must be resident wherever the gather kernels run. This
+module removes that cap by sharding beta's rows over the mesh `model`
+axis and the batch over the `data` axis, while keeping the PR-2
+sample-tiled Pallas kernels as the per-device compute:
+
+  1. retrieval — `mips.sharded.sharded_topk` per beta shard + global
+     K-merge (communication O(n * B * K), never O(P));
+  2. sampling — the eps-mixture draws run on the merged top-K exactly
+     as in the single-device path (same keys => same draws);
+  3. id routing — each device needs every sampled id to decide which
+     rows it owns: an all-gather of the (B, S) id tensor along `model`
+     (`collectives.gather_samples`), then local-id rebasing
+     (`collectives.rebase_ids`) maps foreign ids to the kernels'
+     dead-slot sentinel (-1);
+  4. local kernels — the sample-tiled `snis_covgrad` forward scores
+     ONLY owned slots (masked slots come back exactly zero after the
+     ownership mask), and the backward regathers owned beta rows;
+  5. reduction — ONE psum of the per-shard score partials along
+     `model` (`collectives.psum_scores`). Each slot receives its
+     owner's bitwise score plus hard zeros, so the reconstructed score
+     matrix — and hence the per-row SNIS normaliser, weights and
+     covariance coefficients — is bit-for-bit the single-device fused
+     path's; the scalar loss then differs only by float-sum
+     reassociation of the final batch reduction over the data-sharded
+     rows (~1e-6 rel, inside the 1e-5 acceptance bar). The normaliser
+     itself (softmax over S) is computed locally after that psum and
+     never reduced again. The backward grad_h partials psum the same
+     way (each slot contributes to exactly one shard).
+
+Ragged catalogs (P % n_shards != 0) zero-pad beta; pad rows are
+unaddressable (ids < P) and `sharded_topk(num_valid=P)` keeps them out
+of retrieval. A device that owns none of the sampled ids contributes
+an exact-zero partial everywhere — the all-foreign case is just "every
+slot masked", which the kernels already handle exactly.
+
+Gradients flow to the user tower only (`h`); beta is fixed
+(Assumption 1), same contract as `fused_covariance_loss`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.policy import SoftmaxPolicy
+from repro.core.proposals import MixtureProposal, UniformProposal
+from repro.core.snis import snis_covariance_coefficients, snis_diagnostics
+from repro.dist.collectives import (
+    gather_samples,
+    pad_rows,
+    pad_samples,
+    psum_scores,
+    rebase_ids,
+)
+from repro.kernels.snis_covgrad.ops import (
+    DEFAULT_SAMPLE_TILE,
+    resolve_sample_tile,
+    snis_covgrad_bwd,
+    snis_scores_fused,
+)
+from repro.mips.exact import TopK
+from repro.mips.sharded import sharded_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Wiring of the dist FOPO step onto a mesh.
+
+    ``routing`` picks how sampled ids reach the beta shards:
+      * "gather"    — actions/log_q/rewards enter shard_map sample-
+                      sharded over `model` and are all-gathered
+                      in-graph (explicit, costed collective; default);
+      * "replicate" — they enter replicated over `model` (the gather
+                      happens implicitly at the jit boundary).
+    Both are exact; they trade an explicit (B, S) all-gather against
+    resharding at dispatch. The remote-DMA in-kernel gather (no id
+    movement at all) is the TPU follow-on tracked in ROADMAP.md.
+    """
+
+    mesh: jax.sharding.Mesh
+    data_axis: str = "data"
+    model_axis: str = "model"
+    routing: str = "gather"
+
+    def __post_init__(self):
+        if self.routing not in ("gather", "replicate"):
+            raise ValueError(f"unknown routing {self.routing!r}")
+        for ax in (self.data_axis, self.model_axis):
+            if ax not in self.mesh.shape:
+                raise ValueError(f"axis {ax!r} not in mesh {self.mesh.shape}")
+
+    @property
+    def n_data(self) -> int:
+        return self.mesh.shape[self.data_axis]
+
+    @property
+    def n_model(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def sample_spec(self) -> P:
+        if self.routing == "gather":
+            return P(self.data_axis, self.model_axis)
+        return P(self.data_axis, None)
+
+
+def make_debug_dist(data: int = 2, model: int = 2, **kw) -> DistConfig:
+    """DistConfig on a small host-CPU mesh (tests / examples; needs
+    >= data*model devices, e.g. XLA_FLAGS=--xla_force_host_platform_
+    device_count=4)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    return DistConfig(mesh=make_debug_mesh(data, model), **kw)
+
+
+# ---------------------------------------------------------------------------
+# the shard_map'd pieces
+# ---------------------------------------------------------------------------
+
+def _local_score_partial(dist, interpret, tile, h_, beta_sh, acts, lq, rw):
+    """One device's score partial (inside shard_map): route ids, rebase
+    to local rows, run the fused forward, and zero non-owned slots —
+    masked slots score h . beta_shard[0] in-kernel (clamped DMA), so
+    the ownership mask is what makes the psum reconstruct exactly the
+    owner's value. Shared by the production path (`_dist_scores`) and
+    the observability hook (`dist_score_partials`)."""
+    if dist.routing == "gather":
+        acts, lq, rw = gather_samples(dist.model_axis, acts, lq, rw)
+    local_acts, owned = rebase_ids(acts, beta_sh.shape[0], dist.model_axis)
+    part = snis_scores_fused(
+        h_, beta_sh, local_acts, lq, rw,
+        interpret=interpret, sample_tile=tile,
+    )
+    return jnp.where(owned, part, 0.0)
+
+
+def _dist_scores(dist, interpret, tile, h, beta_p, actions, log_q, rewards):
+    """Global sampled scores [B, Sp]: per-shard fused forward on owned
+    slots, ownership-masked, psum'd once along `model`."""
+
+    def local(h_, beta_sh, acts, lq, rw):
+        part = _local_score_partial(
+            dist, interpret, tile, h_, beta_sh, acts, lq, rw
+        )
+        return psum_scores(part, dist.model_axis)
+
+    return shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(
+            P(dist.data_axis, None),
+            P(dist.model_axis, None),
+            dist.sample_spec(),
+            dist.sample_spec(),
+            dist.sample_spec(),
+        ),
+        out_specs=P(dist.data_axis, None),
+        check_vma=False,
+    )(h, beta_p, actions, log_q, rewards)
+
+
+def _dist_grad_h(dist, interpret, tile, g_scores, actions, beta_p):
+    """grad_h [B, L] = sum_s g[b, s] beta[a_bs]: per-shard backward
+    gather-reduce over owned slots, psum'd along `model`."""
+
+    def local(g_, acts, beta_sh):
+        if dist.routing == "gather":
+            g_, acts = gather_samples(dist.model_axis, g_, acts)
+        local_acts, _ = rebase_ids(acts, beta_sh.shape[0], dist.model_axis)
+        part = snis_covgrad_bwd(
+            g_, local_acts, beta_sh, interpret=interpret, sample_tile=tile
+        )
+        return jax.lax.psum(part, dist.model_axis)
+
+    return shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(
+            dist.sample_spec(),
+            dist.sample_spec(),
+            P(dist.model_axis, None),
+        ),
+        out_specs=P(dist.data_axis, None),
+        check_vma=False,
+    )(g_scores, actions, beta_p)
+
+
+def dist_score_partials(
+    h, beta, actions, log_q, rewards, *, dist: DistConfig,
+    interpret: bool = True, sample_tile: int = DEFAULT_SAMPLE_TILE,
+):
+    """Per-shard score partials [n_model, B, S] BEFORE the psum —
+    observability hook for tests (e.g. the all-foreign-ids shard must
+    be exactly zero) and for debugging ownership masks."""
+    tile = resolve_sample_tile(sample_tile, actions.shape[1])
+    beta_p = pad_rows(beta, dist.n_model)
+    actions, log_q, rewards = pad_samples(
+        actions, log_q, rewards, dist.n_model
+    )
+
+    def local(h_, beta_sh, acts, lq, rw):
+        return _local_score_partial(
+            dist, interpret, tile, h_, beta_sh, acts, lq, rw
+        )[None]
+
+    return shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(
+            P(dist.data_axis, None),
+            P(dist.model_axis, None),
+            dist.sample_spec(),
+            dist.sample_spec(),
+            dist.sample_spec(),
+        ),
+        out_specs=P(dist.model_axis, dist.data_axis, None),
+        check_vma=False,
+    )(h, beta_p, actions, log_q, rewards)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp loss — the dist twin of gradients.fused_covariance_loss
+# ---------------------------------------------------------------------------
+
+def _dist_loss_pieces(dist, interpret, tile, s_orig, h, beta_p, actions, log_q, rewards):
+    scores = _dist_scores(
+        dist, interpret, tile, h, beta_p, actions, log_q, rewards
+    )
+    # crop the routing-pad columns (dead slots appended by pad_samples)
+    # BEFORE the SNIS chain: the psum'd scores equal the owner-kernel
+    # values bitwise, and on equal shapes the softmax/reduction lowering
+    # is identical to the single-device fused path — without the crop,
+    # XLA's wider reduction tree reassociates the same sum to a
+    # different last ulp (seed-dependent)
+    scores = scores[:, :s_orig]
+    actions_c, log_q_c, rewards_c = (
+        actions[:, :s_orig], log_q[:, :s_orig], rewards[:, :s_orig]
+    )
+    wbar = jax.nn.softmax(scores - log_q_c, axis=-1) * (actions_c >= 0)
+    coeff = snis_covariance_coefficients(wbar, rewards_c)
+    loss = -jnp.mean(jnp.sum(coeff * scores, axis=-1))
+    return loss, snis_diagnostics(wbar, rewards_c), coeff
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _dist_covariance_loss(dist, interpret, tile, s_orig, h, beta_p, actions, log_q, rewards):
+    loss, aux, _ = _dist_loss_pieces(
+        dist, interpret, tile, s_orig, h, beta_p, actions, log_q, rewards
+    )
+    return loss, aux
+
+
+def _dist_covariance_loss_fwd(dist, interpret, tile, s_orig, h, beta_p, actions, log_q, rewards):
+    loss, aux, coeff = _dist_loss_pieces(
+        dist, interpret, tile, s_orig, h, beta_p, actions, log_q, rewards
+    )
+    return (loss, aux), (coeff, actions, beta_p)
+
+
+def _dist_covariance_loss_bwd(dist, interpret, tile, s_orig, res, ct):
+    coeff, actions, beta_p = res
+    ct_loss = ct[0]  # aux cotangents are diagnostics — discarded
+    batch, sp = actions.shape
+    g_scores = (-ct_loss / batch) * coeff  # [B, s_orig]
+    if sp != s_orig:  # re-pad to the routed width; pad slots are dead
+        g_scores = jnp.concatenate(
+            [g_scores, jnp.zeros((batch, sp - s_orig), g_scores.dtype)],
+            axis=1,
+        )
+    grad_h = _dist_grad_h(dist, interpret, tile, g_scores, actions, beta_p)
+    return (
+        grad_h,
+        jnp.zeros_like(beta_p),  # fixed embeddings (Assumption 1); DCE'd
+        np.zeros(actions.shape, dtype=jax.dtypes.float0),
+        jnp.zeros_like(g_scores),  # log_q: weights evaluated, not diff'd
+        jnp.zeros_like(g_scores),  # rewards: logged feedback, constant
+    )
+
+
+_dist_covariance_loss.defvjp(_dist_covariance_loss_fwd, _dist_covariance_loss_bwd)
+
+
+def dist_fused_covariance_loss(
+    h: jnp.ndarray,  # [B, L] user embeddings (differentiable)
+    beta: jnp.ndarray,  # [P, L] fixed item embeddings (any P — padded here)
+    actions: jnp.ndarray,  # [B, S] int32 global ids; -1 marks masked slots
+    log_q: jnp.ndarray,  # [B, S]; LOG_Q_PAD on masked slots
+    rewards: jnp.ndarray,  # [B, S]
+    *,
+    dist: DistConfig,
+    interpret: bool = True,
+    sample_tile: int = DEFAULT_SAMPLE_TILE,
+) -> tuple[jnp.ndarray, dict]:
+    """The multi-device fused FOPO step: (loss, aux) with a custom VJP
+    whose forward/backward run the sample-tiled Pallas kernels on each
+    device's beta shard. Matches `fused_covariance_loss` (the
+    single-device path) per slot bitwise on scores/weights; the scalar
+    loss and grad_h differ only by float-sum reassociation of the
+    batch/sample reductions over the sharded dims (~1e-6 rel).
+    Requires B % n_data == 0; P and S are padded here as needed (zero
+    rows / dead slots — exact no-ops)."""
+    b, s = actions.shape
+    if b % dist.n_data:
+        raise ValueError(
+            f"batch {b} must be a multiple of the data-axis size "
+            f"({dist.n_data})"
+        )
+    tile = resolve_sample_tile(sample_tile, s)
+    beta_p = pad_rows(beta, dist.n_model)
+    if dist.routing == "gather":
+        actions, log_q, rewards = pad_samples(
+            actions, log_q, rewards, dist.n_model
+        )
+    return _dist_covariance_loss(
+        dist, interpret, tile, s, h, beta_p, actions, log_q, rewards
+    )
+
+
+# ---------------------------------------------------------------------------
+# the full dist Algorithm-1 loss — retrieval + sampling + fused step
+# ---------------------------------------------------------------------------
+
+def dist_sharded_topk(
+    h: jnp.ndarray,  # [B, L] user embeddings (proposal side)
+    beta: jnp.ndarray,  # [P, L]
+    k: int,
+    dist: DistConfig,
+    *,
+    num_items: int | None = None,
+    block_items: int = 4096,
+) -> TopK:
+    """Proposal retrieval over the row-sharded (and, if ragged, padded)
+    catalog: per-shard streaming top-K + global K-merge, batch-sharded
+    over `data`. Pad rows are masked out pre-merge (num_valid)."""
+    p = beta.shape[0]
+    beta_p = pad_rows(beta, dist.n_model)
+    num_valid = num_items if num_items is not None else p
+
+    def local(q, items_sh):
+        return sharded_topk(
+            q, items_sh, k, dist.model_axis, block_items, num_valid
+        )
+
+    return shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(P(dist.data_axis, None), P(dist.model_axis, None)),
+        out_specs=TopK(
+            scores=P(dist.data_axis, None), indices=P(dist.data_axis, None)
+        ),
+        check_vma=False,
+    )(h, beta_p)
+
+
+def _sample_replicated(dist: DistConfig, local_fn, *arrays):
+    """Run the proposal sampling with *replicated* semantics on every
+    device: a shard_map whose specs are all P() pins the jax.random
+    chain to one unpartitioned program per device, so the draws equal
+    the eager / single-device stream bit for bit. Without this, the
+    pre-partitionable threefry (jax_threefry_partitionable=False, the
+    0.4.37 default) silently produces DIFFERENT values when the outer
+    jit partitions the sampling ops over the mesh — same distribution,
+    different trajectory, no error (caught by the dist-vs-single
+    trainer parity test)."""
+    from repro.core.proposals import ProposalSample
+
+    return shard_map(
+        local_fn,
+        mesh=dist.mesh,
+        in_specs=(P(),) * len(arrays),
+        out_specs=ProposalSample(actions=P(), log_q=P(), topk_slot=P()),
+        check_vma=False,
+    )(*arrays)
+
+
+def dist_fopo_loss(
+    policy: SoftmaxPolicy,
+    params,
+    key: jax.Array,
+    x: jnp.ndarray,  # [B, Dx] — batch-sharded over `data`
+    beta: jnp.ndarray,  # [P, L] — row-sharded over `model`
+    reward_fn,
+    cfg,  # FOPOConfig with cfg.dist set
+    retriever=None,  # optional injected retriever (tests); None -> sharded
+    epsilon: float | jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Algorithm 1 on the mesh. Sampling uses the same MixtureProposal /
+    UniformProposal draws as the single-device path (identical keys =>
+    identical actions), so dist-vs-single parity is exact end to end.
+    The in-kernel `fused_sampler` is not wired here yet (its tile-
+    aligned stream is per-device; the routing story is the remote-DMA
+    follow-on)."""
+    dist: DistConfig = cfg.dist
+    if cfg.fused_sampler:
+        raise ValueError(
+            "FOPOConfig(fused_sampler=True) is not supported with dist=; "
+            "the dist step samples via MixtureProposal"
+        )
+    eps = cfg.epsilon if epsilon is None else epsilon
+    interpret = cfg.fused_interpret
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tile = resolve_sample_tile(cfg.sample_tile, cfg.num_samples)
+
+    h_prop = jax.lax.stop_gradient(policy.user_embedding(params, x))
+    if isinstance(eps, float) and eps >= 1.0:
+        batch, s = x.shape[0], cfg.num_samples
+        sample = _sample_replicated(
+            dist,
+            lambda k: UniformProposal(cfg.num_items).sample(k, batch, s),
+            key,
+        )
+    else:
+        if retriever is not None:
+            topk = retriever(h_prop, beta)
+        else:
+            topk = dist_sharded_topk(
+                h_prop, beta, cfg.top_k, dist, num_items=cfg.num_items
+            )
+        # eps rides along as an operand so traced schedules work; the
+        # traced-eps route draws identically to the float one
+        sample = _sample_replicated(
+            dist,
+            lambda k, idx, sc, e: MixtureProposal(cfg.num_items, e).sample(
+                k, idx, sc, cfg.num_samples
+            ),
+            key, topk.indices, topk.scores, jnp.asarray(eps, jnp.float32),
+        )
+    valid = sample.actions >= 0
+    rewards = jax.lax.stop_gradient(
+        reward_fn(jnp.maximum(sample.actions, 0)) * valid
+    )
+    h = policy.user_embedding(params, x)
+    return dist_fused_covariance_loss(
+        h, beta, sample.actions, sample.log_q, rewards,
+        dist=dist, interpret=interpret, sample_tile=tile,
+    )

@@ -1,0 +1,184 @@
+"""Sharding-spec trees for the production meshes (the static half of
+`repro.dist`; the runtime half lives in `repro.dist.fopo`).
+
+`AXIS_SIZES` is the single source of truth for the production mesh axis
+extents (see `repro.launch.mesh`): a 16x16 (data x model) pod, doubled
+by a leading pure-DP `pod` axis in the multi-pod mesh. The spec
+builders below mirror a model's params/cache pytree with a
+PartitionSpec pytree; `launch/specs.py` zips the two into cell programs
+for the dry-run, the roofline bench, and the launcher.
+
+Every rule is divisibility-guarded: a dim is sharded over an axis only
+when the axis size divides it (`_guard`), otherwise that dim is
+replicated. This keeps one spec table valid across the whole arch pool
+(gemma-2's 8 KV heads cannot split 16 ways; olmoe's 16 can) without
+per-arch special cases — the guard IS the policy, and
+`tests/test_programs.py` asserts it holds for every (arch x shape x
+mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Production mesh axis extents (repro.launch.mesh.make_production_mesh):
+# single pod = (data=16, model=16); multi-pod adds pod=2 in front.
+AXIS_SIZES: dict[str, int] = {"pod": 2, "data": 16, "model": 16}
+
+MODEL_AXIS = "model"
+
+
+def axis_product(axes) -> int:
+    """Total device count behind a PartitionSpec entry (None -> 1)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return AXIS_SIZES[axes]
+    out = 1
+    for a in axes:
+        out *= AXIS_SIZES[a]
+    return out
+
+
+def _guard(dim: int, axes):
+    """Shard `dim` over `axes` only if the mesh extent divides it."""
+    return axes if (axes is not None and dim % axis_product(axes) == 0) else None
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return tuple(out)
+
+
+def _replicated(leaf) -> P:
+    return P(*(None,) * len(leaf.shape))
+
+
+# ---------------------------------------------------------------------------
+# LM family — megatron-style tensor parallelism over `model`
+# ---------------------------------------------------------------------------
+
+# name -> index of the dim sharded over `model`. Layer-stacked leaves
+# carry a leading [n_layers] dim, which is never sharded (lax.scan
+# carry). Column-parallel projections shard their output features;
+# row-parallel ones shard the contraction dim (the classic pairing, so
+# activations stay sharded between the two matmuls of a block).
+_LM_MODEL_DIM = {
+    "wq": 2,  # [n, d, H*dh]   column-parallel (heads)
+    "wk": 2,  # [n, d, KV*dh]
+    "wv": 2,  # [n, d, KV*dh]
+    "wo": 1,  # [n, H*dh, d]   row-parallel
+    "w_gate": 2,  # [n, d, d_ff]  column-parallel
+    "w_up": 2,  # [n, d, d_ff]
+    "w_down": 1,  # [n, d_ff, d]  row-parallel
+    "we_gate": 3,  # [n, E, d, eff] expert-inner column-parallel
+    "we_up": 3,  # [n, E, d, eff]
+    "we_down": 2,  # [n, E, eff, d] expert-inner row-parallel
+    "embed": 0,  # [V, d]        vocab rows (the FOPO beta layout)
+    "unembed": 0,  # [V, d]
+}
+# router [n, d, E], norms [n, d] / [d]: replicated (tiny, latency-bound).
+
+
+def lm_param_specs(params: Any) -> Any:
+    """PartitionSpec tree mirroring `models.lm` params: tensor-parallel
+    over `model`, divisibility-guarded per leaf, replicated otherwise.
+    Accepts real arrays or ShapeDtypeStructs (dry-run)."""
+
+    def spec(path, leaf):
+        name = _path_names(path)[-1]
+        dim = _LM_MODEL_DIM.get(name)
+        if dim is None or dim >= len(leaf.shape):
+            return _replicated(leaf)
+        axes = [None] * len(leaf.shape)
+        axes[dim] = _guard(leaf.shape[dim], MODEL_AXIS)
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def lm_cache_specs(cache: Any, batch_axis, model_axis=MODEL_AXIS) -> Any:
+    """KV-cache spec tree: k/v are [n_layers, B, S, KV, Dh]. Batch is
+    sharded over `batch_axis` (None for serving cells whose batch does
+    not divide the DP extent — `launch/specs.py` decides), and the
+    head side over `model_axis`: KV heads when they divide the axis
+    (olmoe's 16), else the head_dim (the GQA archs keep 8 or fewer KV
+    heads — splitting Dh keeps the cache distributed instead of
+    replicating 4+ GB per device). The scan-carry layer dim and the
+    sequence dim are never sharded (decode's dynamic_update_slice would
+    cross shards)."""
+
+    def spec(leaf):
+        if len(leaf.shape) != 5:  # `length` scalar
+            return _replicated(leaf)
+        _, b, _, kv, dh = leaf.shape
+        kv_ax = _guard(kv, model_axis)
+        dh_ax = _guard(dh, model_axis) if kv_ax is None else None
+        return P(None, _guard(b, batch_axis), None, kv_ax, dh_ax)
+
+    return jax.tree.map(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# GNN / recsys — name overrides for the big tables + a generic
+# divisibility rule for the dense stacks
+# ---------------------------------------------------------------------------
+
+# 2-D tables whose ROWS are the natural shard dim (catalog/vocab rows —
+# the same layout the sharded MIPS retriever and the dist FOPO step
+# assume for beta).
+_ROW_SHARDED_TABLES = {"items", "embed", "wide"}
+
+
+def _generic_matrix_spec(leaf) -> P:
+    """Dense weights (possibly layer-stacked): shard the last dim over
+    `model` when divisible (column-parallel), else the second-to-last
+    (row-parallel), else replicate. 0/1-D leaves replicate."""
+    shape = leaf.shape
+    if len(shape) < 2:
+        return _replicated(leaf)
+    axes = [None] * len(shape)
+    if _guard(shape[-1], MODEL_AXIS):
+        axes[-1] = MODEL_AXIS
+    elif _guard(shape[-2], MODEL_AXIS):
+        axes[-2] = MODEL_AXIS
+    return P(*axes)
+
+
+def gnn_param_specs(params: Any) -> Any:
+    """Spec tree for `models.gnn` params: encoder/decoder/edge/node MLP
+    weights shard their hidden features over `model` (d_hidden=512
+    divides 16); biases and the ragged decoder head replicate."""
+
+    def spec(path, leaf):
+        name = _path_names(path)[-1]
+        if name == "b":
+            return _replicated(leaf)
+        return _generic_matrix_spec(leaf)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def recsys_param_specs(params: Any) -> Any:
+    """Spec tree for `models.recsys` params: the million-row item /
+    hashed-field tables shard their rows over `model` (the beta layout
+    FOPO retrieval and the dist step consume); the small dense stacks
+    use the generic guarded rule (wide&deep's 1024/512/256 MLP shards,
+    din/dien's 200/80 stacks replicate)."""
+
+    def spec(path, leaf):
+        name = _path_names(path)[-1]
+        if name in _ROW_SHARDED_TABLES and len(leaf.shape) == 2:
+            return P(_guard(leaf.shape[0], MODEL_AXIS), None)
+        if name == "b" or len(leaf.shape) < 2:
+            return _replicated(leaf)
+        return _generic_matrix_spec(leaf)
+
+    return jax.tree_util.tree_map_with_path(spec, params)

@@ -25,6 +25,7 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.configs import ARCH_IDS, get_arch  # noqa: E402
 from repro.launch import costs, jaxpr_cost  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -49,7 +50,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool, opt: bool = Fals
         else None,
         donate_argnums=prog.donate_argnums,
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jitted.lower(*prog.args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -61,6 +62,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool, opt: bool = Fals
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # jax<=0.4: one properties dict per module
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = costs.collective_bytes(hlo, prog.loop_trips)
     hlo_flops = jc["flops"]

@@ -31,21 +31,42 @@ def sharded_topk(
     k: int,
     axis: str,
     block_items: int = 4096,
+    num_valid: int | None = None,
 ) -> TopK:
-    """Call INSIDE shard_map. Returns replicated global TopK [B, K]."""
+    """Call INSIDE shard_map. Returns replicated global TopK [B, K].
+
+    ``num_valid`` masks the tail of a zero-padded catalog (ragged
+    P % n_shards != 0 — see repro.dist.collectives.pad_rows): the local
+    top-K is widened by the pad count (pad rows score exactly 0 and
+    could otherwise evict a real negative-scoring item from the local
+    candidate set before masking), then ids >= num_valid are demoted to
+    score NEG_INF / id -1 before the merge — so pad rows never displace
+    real items from the global top-K."""
     n = compat_axis_size(axis)
     shard_id = jax.lax.axis_index(axis)
     rows = items_shard.shape[0]
-    local = topk_streaming(queries, items_shard, k, block_items=block_items)
+    local_k = k
+    if num_valid is not None:
+        # widen by the pad count so masking can never cost a real item
+        # (topk_streaming back-fills id -1 / NEG_INF past the row count)
+        local_k = k + max(0, n * rows - num_valid)
+    local = topk_streaming(queries, items_shard, local_k, block_items=block_items)
     # local -> global ids
     gids = jnp.where(
         local.indices >= 0, local.indices + shard_id * rows, -1
     ).astype(jnp.int32)
-    all_scores = jax.lax.all_gather(local.scores, axis)  # [n, B, K]
-    all_ids = jax.lax.all_gather(gids, axis)  # [n, B, K]
+    local_scores = local.scores
+    if num_valid is not None:
+        from repro.constants import NEG_INF
+
+        ok = (gids >= 0) & (gids < num_valid)
+        local_scores = jnp.where(ok, local_scores, NEG_INF)
+        gids = jnp.where(ok, gids, -1)
+    all_scores = jax.lax.all_gather(local_scores, axis)  # [n, B, K']
+    all_ids = jax.lax.all_gather(gids, axis)  # [n, B, K']
     b = queries.shape[0]
-    cat_s = jnp.transpose(all_scores, (1, 0, 2)).reshape(b, n * k)
-    cat_i = jnp.transpose(all_ids, (1, 0, 2)).reshape(b, n * k)
+    cat_s = jnp.transpose(all_scores, (1, 0, 2)).reshape(b, n * local_k)
+    cat_i = jnp.transpose(all_ids, (1, 0, 2)).reshape(b, n * local_k)
     vals, pos = jax.lax.top_k(cat_s, k)
     idx = jnp.take_along_axis(cat_i, pos, axis=-1)
     return TopK(scores=vals, indices=idx)
@@ -76,6 +97,8 @@ def context_sharded_topk(
     item_axis: str = "model",
     batch_axes=("data",),
     block_items: int = 8192,
+    mesh=None,
+    num_valid: int | None = None,
 ) -> TopK:
     """2-D distributed top-K using the AMBIENT mesh (call inside pjit):
     queries row-sharded over `batch_axes`, items row-sharded over
@@ -86,10 +109,11 @@ def context_sharded_topk(
     every block)."""
 
     def fn(q_, it_):
-        return sharded_topk(q_, it_, k, item_axis, block_items)
+        return sharded_topk(q_, it_, k, item_axis, block_items, num_valid)
 
     return shard_map(
         fn,
+        mesh=mesh,  # None -> the ambient mesh (`with mesh:` context)
         in_specs=(P(batch_axes, None), P(item_axis, None)),
         out_specs=TopK(scores=P(batch_axes, None), indices=P(batch_axes, None)),
         check_vma=False,

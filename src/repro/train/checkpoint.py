@@ -12,8 +12,17 @@ Design constraints for 1000+ node jobs:
   * iterator state (epoch/position/seed) and step counter ride along, so
     resume is bitwise-deterministic.
 
-For arrays too large for single-host memory, save-sharded would be added
-per-axis; at this repo's scales the replicated path is exact and simple.
+For arrays too large to replicate host-side (dist-mode beta tables:
+catalog rows sharded over the mesh `model` axis) the save-sharded path
+is available: `save_sharded` writes one npz per row shard — each shard
+is pulled from the device mesh independently, so peak host memory is
+one shard, never the full table — and `restore_sharded` re-shards
+elastically on load (any saved shard count -> any requested shard
+count, including a different mesh size after restart). The FOPOTrainer
+does not call it: beta is fixed (Assumption 1) and reloaded from the
+dataset, so only params/opt state ride the step checkpoints; wire
+`save_sharded(dir, "beta", trainer.beta, n)` yourself if your beta
+lives nowhere else.
 """
 from __future__ import annotations
 
@@ -95,6 +104,114 @@ def list_checkpoints(directory: str) -> list[int]:
 def latest_checkpoint(directory: str) -> int | None:
     steps = list_checkpoints(directory)
     return steps[-1] if steps else None
+
+
+# ---------------------------------------------------------------------------
+# save-sharded arrays — per-row-shard npz + elastic re-shard on load
+# ---------------------------------------------------------------------------
+
+SHARDS_MANIFEST = "shards.json"
+
+
+def shard_bounds(rows: int, num_shards: int) -> list[tuple[int, int]]:
+    """Contiguous row ranges of an even split (ragged remainders spread
+    over the leading shards — np.array_split's rule). The single
+    partitioning rule shared by save and elastic restore."""
+    base, rem = divmod(rows, num_shards)
+    bounds, start = [], 0
+    for i in range(num_shards):
+        end = start + base + (1 if i < rem else 0)
+        bounds.append((start, end))
+        start = end
+    return bounds
+
+
+def save_sharded(
+    directory: str, name: str, array, num_shards: int, *, axis: int = 0
+) -> str:
+    """Atomically write `array` as `num_shards` per-shard npz files.
+
+    Each shard is sliced and pulled to host independently — for a
+    mesh-sharded jax Array the slice resolves against the row shards,
+    so the full table is never replicated host-side. Layout:
+    ``<directory>/<name>_sharded/{shards.json, shard_00000.npz, ...}``.
+    """
+    os.makedirs(directory, exist_ok=True)
+    shape = tuple(int(d) for d in array.shape)
+    bounds = shard_bounds(shape[axis], num_shards)
+    manifest = {
+        "shape": list(shape),
+        "dtype": str(np.dtype(array.dtype)),
+        "axis": int(axis),
+        "bounds": [list(b) for b in bounds],
+    }
+    final = os.path.join(directory, f"{name}_sharded")
+    tmp = tempfile.mkdtemp(prefix=f".{name}_tmp_", dir=directory)
+    try:
+        index = [slice(None)] * len(shape)
+        for i, (start, end) in enumerate(bounds):
+            index[axis] = slice(start, end)
+            np.savez(
+                os.path.join(tmp, f"shard_{i:05d}.npz"),
+                rows=np.asarray(array[tuple(index)]),
+            )
+        with open(os.path.join(tmp, SHARDS_MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def restore_sharded(
+    directory: str,
+    name: str,
+    *,
+    shard_id: int | None = None,
+    num_shards: int | None = None,
+) -> np.ndarray:
+    """Load a save-sharded array, re-sharding elastically.
+
+    ``shard_id=None`` returns the full array (small tables / tests).
+    With ``shard_id``/``num_shards`` it returns THAT shard of a fresh
+    `shard_bounds(rows, num_shards)` split — independent of the saved
+    shard count: only the saved files overlapping the requested row
+    range are opened, so a 64-shard save restores onto a 48-way mesh
+    while reading <= 2 files per device.
+    """
+    path = os.path.join(directory, f"{name}_sharded")
+    with open(os.path.join(path, SHARDS_MANIFEST)) as f:
+        manifest = json.load(f)
+    axis = manifest["axis"]
+    dtype = np.dtype(manifest["dtype"])
+    saved = [tuple(b) for b in manifest["bounds"]]
+    rows = manifest["shape"][axis]
+    if shard_id is None:
+        want = (0, rows)
+    else:
+        if num_shards is None:
+            raise ValueError("num_shards is required with shard_id")
+        want = shard_bounds(rows, num_shards)[shard_id]
+    pieces = []
+    for i, (start, end) in enumerate(saved):
+        lo, hi = max(start, want[0]), min(end, want[1])
+        if lo >= hi:
+            continue
+        with np.load(os.path.join(path, f"shard_{i:05d}.npz")) as z:
+            chunk = z["rows"]
+        index = [slice(None)] * chunk.ndim
+        index[axis] = slice(lo - start, hi - start)
+        pieces.append(chunk[tuple(index)])
+    out = np.concatenate(pieces, axis=axis) if pieces else np.zeros(
+        [0 if i == axis else d for i, d in enumerate(manifest["shape"])],
+        dtype,
+    )
+    return out.astype(dtype, copy=False)
 
 
 def restore_checkpoint(

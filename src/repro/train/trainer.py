@@ -62,7 +62,14 @@ class FOPOTrainer:
         fopo_cfg = cfg.fopo
         if fopo_cfg.num_items == 0:
             fopo_cfg = dataclasses.replace(fopo_cfg, num_items=p)
-        if (fopo_cfg.fused or fopo_cfg.fused_sampler) and fopo_cfg.fused_interpret is None:
+        if fopo_cfg.dist is not None and fopo_cfg.fused_sampler:
+            raise ValueError(
+                "FOPOConfig(fused_sampler=True) is not supported with dist="
+            )
+        if (
+            fopo_cfg.fused or fopo_cfg.fused_sampler
+            or fopo_cfg.dist is not None
+        ) and fopo_cfg.fused_interpret is None:
             # resolve the fused-kernel execution mode once, at wiring
             # time: compiled Pallas on TPU, interpret fallback elsewhere
             fopo_cfg = dataclasses.replace(
@@ -79,6 +86,17 @@ class FOPOTrainer:
         key = jax.random.PRNGKey(cfg.seed)
         self.params = linear_tower_init(key, l, l)
         self.beta = jnp.asarray(dataset.item_embeddings)
+        dist = cfg.fopo.dist
+        if dist is not None and p % dist.n_model == 0:
+            # place the catalog row-sharded over `model` up front so no
+            # step ever materialises it on one device (ragged catalogs
+            # stay host-side; the dist step pads and shards them itself)
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            self.beta = jax.device_put(
+                self.beta, NamedSharding(dist.mesh, P(dist.model_axis, None))
+            )
         self.optimizer: Optimizer = adam(cfg.learning_rate)
         self.opt_state = self.optimizer.init(self.params)
         self.step = 0
@@ -88,9 +106,11 @@ class FOPOTrainer:
             seed=cfg.seed,
         )
         kw = retriever_kwargs or {}
-        if cfg.estimator == "fopo":
+        if cfg.estimator == "fopo" and cfg.fopo.dist is None:
             self.retriever = make_retriever(cfg.fopo, **kw)
         else:
+            # dist mode: fopo_loss routes to repro.dist.fopo, which owns
+            # retrieval (sharded top-K merge over the beta shards)
             self.retriever = None
         self._train_step = self._build_step()
 
@@ -137,6 +157,20 @@ class FOPOTrainer:
             return params, opt_state, loss, aux
 
         return train_step
+
+    # ------------------------------------------------------------------
+    def _place_batch(self, arr) -> jnp.ndarray:
+        """Data-parallel placement: batches land row-sharded over the
+        mesh `data` axis in dist mode (otherwise a plain asarray)."""
+        arr = jnp.asarray(arr)
+        dist = self.cfg.fopo.dist
+        if dist is None or self.cfg.estimator != "fopo":
+            return arr
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(dist.data_axis, *(None,) * (arr.ndim - 1))
+        return jax.device_put(arr, NamedSharding(dist.mesh, spec))
 
     # ------------------------------------------------------------------
     def maybe_restore(self) -> bool:
@@ -188,8 +222,8 @@ class FOPOTrainer:
                 self.params,
                 self.opt_state,
                 sub,
-                jnp.asarray(batch["contexts"]),
-                jnp.asarray(batch["positives"]),
+                self._place_batch(batch["contexts"]),
+                self._place_batch(batch["positives"]),
                 eps,
             )
             jax.block_until_ready(loss)

@@ -10,7 +10,10 @@ from repro.train.checkpoint import (
     latest_checkpoint,
     list_checkpoints,
     restore_checkpoint,
+    restore_sharded,
     save_checkpoint,
+    save_sharded,
+    shard_bounds,
 )
 
 
@@ -92,3 +95,64 @@ def test_trainer_restart_resumes(tmp_path):
     # and training continues from there
     tr2.train(3)
     assert tr2.step == 13
+
+
+# ---------------------------------------------------------------------------
+# save-sharded beta tables: per-shard npz + elastic re-shard on load
+# ---------------------------------------------------------------------------
+
+def test_shard_bounds_cover_and_partition():
+    for rows, n in [(203, 4), (16, 4), (7, 3), (5, 8)]:
+        bounds = shard_bounds(rows, n)
+        assert bounds[0][0] == 0 and bounds[-1][1] == rows
+        for (a, b), (c, d) in zip(bounds, bounds[1:]):
+            assert b == c and a <= b and c <= d
+
+
+def test_sharded_roundtrip_full(tmp_path):
+    beta = np.random.default_rng(0).normal(size=(203, 16)).astype(np.float32)
+    save_sharded(str(tmp_path), "beta", beta, num_shards=4)
+    out = restore_sharded(str(tmp_path), "beta")
+    assert out.dtype == beta.dtype
+    np.testing.assert_array_equal(out, beta)
+
+
+@pytest.mark.parametrize("saved_n,load_n", [(4, 4), (4, 3), (3, 8), (1, 4)])
+def test_sharded_elastic_reshard(tmp_path, saved_n, load_n):
+    """Saved with one shard count, restored shard-by-shard with another
+    (mesh-size change between restarts): every new shard is exactly the
+    corresponding row range, and the concat is the original table."""
+    beta = np.random.default_rng(1).normal(size=(101, 8)).astype(np.float32)
+    save_sharded(str(tmp_path), "beta", beta, num_shards=saved_n)
+    pieces = [
+        restore_sharded(str(tmp_path), "beta", shard_id=i, num_shards=load_n)
+        for i in range(load_n)
+    ]
+    for (start, end), piece in zip(shard_bounds(101, load_n), pieces):
+        np.testing.assert_array_equal(piece, beta[start:end])
+    np.testing.assert_array_equal(np.concatenate(pieces, axis=0), beta)
+
+
+def test_sharded_roundtrip_jax_array(tmp_path):
+    """A device-backed (possibly mesh-sharded) beta saves shard-by-shard
+    without a host-side replica of the full table."""
+    beta = jnp.asarray(
+        np.random.default_rng(2).normal(size=(64, 8)).astype(np.float32)
+    )
+    save_sharded(str(tmp_path), "beta", beta, num_shards=4)
+    out = restore_sharded(str(tmp_path), "beta")
+    np.testing.assert_array_equal(out, np.asarray(beta))
+
+
+def test_sharded_atomic_overwrite(tmp_path):
+    beta1 = np.ones((10, 4), np.float32)
+    beta2 = np.full((10, 4), 2.0, np.float32)
+    save_sharded(str(tmp_path), "beta", beta1, num_shards=2)
+    save_sharded(str(tmp_path), "beta", beta2, num_shards=3)
+    np.testing.assert_array_equal(restore_sharded(str(tmp_path), "beta"), beta2)
+
+
+def test_sharded_requires_num_shards_for_shard_load(tmp_path):
+    save_sharded(str(tmp_path), "beta", np.ones((8, 2), np.float32), num_shards=2)
+    with pytest.raises(ValueError, match="num_shards"):
+        restore_sharded(str(tmp_path), "beta", shard_id=0)

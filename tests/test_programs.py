@@ -5,12 +5,6 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-# repro.launch.specs consumes the sharding-spec trees from repro.dist,
-# which is not in the tree yet (see ROADMAP open items) — skip, don't
-# error, so the rest of tier-1 still runs under -x.
-pytest.importorskip(
-    "repro.dist.sharding", reason="repro.dist sharding specs not yet in tree"
-)
 from repro.configs import ARCH_IDS, all_cells, get_arch
 from repro.launch.specs import build_program
 

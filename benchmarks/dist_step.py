@@ -9,7 +9,11 @@ Two kinds of rows:
     the replicated-beta alternative's per-device HBM residency and
     gather traffic, with roofline-bandwidth step-time estimates. These
     are the catalog-scaling terms: beta residency and gather bytes
-    drop n_model-fold, comms grow O(B(S+K)) — never O(P).
+    drop n_model-fold, comms grow O(B(S+K)) — never O(P). The
+    `_fsampler` twin of each row models fused_sampler=True under dist
+    (landed PR 4): the jax.random (B, S, K) Gumbel round-trip —
+    `sampler_gumbel_bytes`, ~8x the gather traffic at paper shapes —
+    drops out of the per-step HBM budget entirely.
   * measured — dist-vs-single wall time and the parity error on a
     4-way (2x2) host-CPU mesh, via the shared
     `benchmarks.dist_parity_probe` SUBPROCESS (the same probe the test
@@ -38,19 +42,25 @@ CATALOG = 1_000_000
 def run() -> None:
     for b, s, k, l in PAPER_SHAPES:
         for n in (2, 4, 16):
-            m = dist_comms_model(b, s, k, l, CATALOG, n)
-            emit(
-                f"dist_comms_B{b}_S{s}_K{k}_L{l}_P{CATALOG}_n{n}",
-                1e6 * m["sharded_step_s"],
-                f"comms_bytes={m['comms_bytes']};"
-                f"id_allgather_bytes={m['id_allgather_bytes']};"
-                f"score_psum_bytes={m['score_psum_bytes']};"
-                f"beta_hbm_sharded={m['beta_hbm_sharded_bytes']};"
-                f"beta_hbm_replicated={m['beta_hbm_replicated_bytes']};"
-                f"gather_hbm_sharded={m['gather_hbm_sharded_bytes']};"
-                f"replicated_step_us={1e6 * m['replicated_step_s']:.1f};"
-                f"advantage={m['advantage']:.2f}x",
-            )
+            for fused_sampler in (False, True):
+                m = dist_comms_model(
+                    b, s, k, l, CATALOG, n, fused_sampler=fused_sampler
+                )
+                tag = "_fsampler" if fused_sampler else ""
+                emit(
+                    f"dist_comms_B{b}_S{s}_K{k}_L{l}_P{CATALOG}_n{n}{tag}",
+                    1e6 * m["sharded_step_s"],
+                    f"comms_bytes={m['comms_bytes']};"
+                    f"id_allgather_bytes={m['id_allgather_bytes']};"
+                    f"score_psum_bytes={m['score_psum_bytes']};"
+                    f"beta_hbm_sharded={m['beta_hbm_sharded_bytes']};"
+                    f"beta_hbm_replicated={m['beta_hbm_replicated_bytes']};"
+                    f"gather_hbm_sharded={m['gather_hbm_sharded_bytes']};"
+                    f"sampler_gumbel_bytes={m['sampler_gumbel_bytes']};"
+                    f"sampler_hbm_bytes={m['sampler_hbm_bytes']};"
+                    f"replicated_step_us={1e6 * m['replicated_step_s']:.1f};"
+                    f"advantage={m['advantage']:.2f}x",
+                )
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     try:
         res = subprocess.run(

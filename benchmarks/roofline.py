@@ -70,6 +70,7 @@ def snis_gather_model(b: int, s: int, l: int, sample_tile: int,
 def dist_comms_model(
     b: int, s: int, k: int, l: int, p: int, n_model: int,
     *, dtype_bytes: int = 4, hbm_bw: float = 819e9, ici_bw: float = 50e9,
+    fused_sampler: bool = False,
 ) -> dict:
     """Comms/HBM model of ONE multi-device fused FOPO step per
     data-replica (b = global batch / n_data), vs keeping beta
@@ -85,9 +86,22 @@ def dist_comms_model(
       * grad reduction         — psum of the (b, L) grad_h partials.
     What it buys: per-device beta residency and per-step gather traffic
     drop n_model-fold — the terms that cap the catalog on one device.
+
+    Sampling (Algorithm 1 step 4) adds HBM traffic on BOTH paths when
+    it runs through jax.random: the mixture's kappa arm materialises a
+    (b, S, K) Gumbel tensor (written once, read back by the argmax) —
+    at the paper's S = 1000, K = 256 that is ~8x the per-step gather
+    traffic itself. ``fused_sampler=True`` models the in-kernel
+    sampler: the draws never leave VMEM, so that whole term vanishes
+    (`sampler_hbm_bytes` = 0; `sampler_gumbel_bytes` reports the
+    removed tensor either way). Since PR 4 the in-kernel sampler runs
+    per data shard on the dist path too, so both step estimates drop
+    the term together.
+
     The `*_s` estimates use the roofline bandwidths above; `advantage`
-    is replicated-path HBM gather time over sharded-path (gather +
-    comms) time — the catalog-scaling headroom at these shapes.
+    is replicated-path (gather + sampling) HBM time over sharded-path
+    (gather + sampling + comms) time — the catalog-scaling headroom at
+    these shapes.
     """
     ring = (n_model - 1) / max(n_model, 1)
     retrieval = ring * n_model * b * k * 2 * dtype_bytes  # scores + ids
@@ -100,10 +114,14 @@ def dist_comms_model(
     # per-step beta row reads (fwd gather + bwd regather)
     gather_replicated = 2 * b * s * l * dtype_bytes
     gather_sharded = gather_replicated // n_model  # owned rows only
-    t_repl = gather_replicated / hbm_bw
-    t_shard = gather_sharded / hbm_bw + comms / ici_bw
+    # jax.random mixture sampling: (b, S, K) Gumbel write + read-back
+    sampler_gumbel = 2 * b * s * k * dtype_bytes
+    sampler_hbm = 0 if fused_sampler else sampler_gumbel
+    t_repl = (gather_replicated + sampler_hbm) / hbm_bw
+    t_shard = (gather_sharded + sampler_hbm) / hbm_bw + comms / ici_bw
     return {
         "n_model": n_model,
+        "fused_sampler": fused_sampler,
         "comms_bytes": int(comms),
         "retrieval_allgather_bytes": int(retrieval),
         "id_allgather_bytes": int(ids),
@@ -113,6 +131,8 @@ def dist_comms_model(
         "beta_hbm_sharded_bytes": int(beta_sharded),
         "gather_hbm_replicated_bytes": int(gather_replicated),
         "gather_hbm_sharded_bytes": int(gather_sharded),
+        "sampler_gumbel_bytes": int(sampler_gumbel),
+        "sampler_hbm_bytes": int(sampler_hbm),
         "replicated_step_s": t_repl,
         "sharded_step_s": t_shard,
         "advantage": t_repl / t_shard if t_shard else float("inf"),

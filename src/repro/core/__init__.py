@@ -1,4 +1,5 @@
 from repro.core.fopo import FOPOConfig, fopo_loss, make_retriever, reinforce_loss
+from repro.core.plan import ExecutionPlan, resolve_interpret
 from repro.core.gradients import (
     covariance_gradient_dense_reference,
     covariance_surrogate,
@@ -37,6 +38,8 @@ from repro.core.snis import (
 
 __all__ = [
     "FOPOConfig",
+    "ExecutionPlan",
+    "resolve_interpret",
     "fopo_loss",
     "make_retriever",
     "reinforce_loss",

@@ -8,26 +8,40 @@ One training step =
   5. SNIS weights + covariance gradient   (O(S) — catalog-free)
   6. optimizer update
 
-The retriever is a plugged function so the same step runs with a dense
-oracle (tests), the streaming Pallas kernel (single device), the IVF
-index (sublinear), or the sharded multi-device retriever (big catalogs).
+How the step runs — which retriever, which sampler (jax.random
+MixtureProposal vs the Pallas in-kernel `fused_sampler`), which kernel
+path (unfused jnp / fused custom_vjp / multi-device shard_map), and in
+which execution mode (compiled vs interpret) — is resolved ONCE from
+`FOPOConfig` + backend + mesh into a frozen `repro.core.plan
+.ExecutionPlan`, whose `execute()` is the single
+retrieval -> sample -> weight -> reduce skeleton shared by the
+single-device and dist paths. `fopo_loss` below is the thin
+config-level entry point that resolves a plan per call; hot loops (the
+trainer) resolve once and pass ``plan=``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.gradients import covariance_surrogate, reinforce_surrogate
+from repro.core.gradients import reinforce_surrogate
+from repro.core.plan import ExecutionPlan, Retriever, make_retriever
 from repro.core.policy import SoftmaxPolicy
-from repro.core.proposals import MixtureProposal, ProposalSample, UniformProposal
-from repro.kernels.fused_sampler import fused_mixture_sample
-from repro.kernels.snis_covgrad.ops import DEFAULT_SAMPLE_TILE, resolve_sample_tile
-from repro.mips.exact import TopK, topk_exact
+from repro.kernels.snis_covgrad.ops import DEFAULT_SAMPLE_TILE
 
-Retriever = Callable[[jnp.ndarray, jnp.ndarray], TopK]  # (h, beta) -> TopK
+if TYPE_CHECKING:
+    from repro.dist.fopo import DistConfig
+
+__all__ = [
+    "FOPOConfig",
+    "fopo_loss",
+    "make_retriever",
+    "reinforce_loss",
+    "Retriever",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,58 +54,31 @@ class FOPOConfig:
     # fused=True runs the SNIS + covariance-gradient step through the
     # Pallas custom_vjp kernels (in-kernel beta gather — no (B, S, L)
     # tensor in HBM). fused_interpret=None auto-falls-back to interpret
-    # mode on non-TPU backends (resolved by the trainer / surrogate).
+    # mode on non-TPU backends (resolved once by ExecutionPlan).
     fused: bool = False
     fused_interpret: bool | None = None
     # sample-tile width TS of the fused kernels: each grid step gathers
     # TS catalog rows into a (TS, L) VMEM tile and folds them with one
     # online-softmax rescale (S/TS grid steps instead of S). 1 selects
-    # the legacy per-sample kernels; clamped to num_samples at use.
+    # the legacy per-sample kernels; clamped to num_samples at plan time.
     sample_tile: int = DEFAULT_SAMPLE_TILE
     # fused_sampler=True draws the eps-mixture actions with the Pallas
     # in-kernel sampler (repro.kernels.fused_sampler): sampled ids and
     # log-q are produced tile-aligned for the covgrad kernels instead
     # of via a jax.random chain over (B, S, K) Gumbel tensors. Same
     # distribution, different PRNG stream — trajectories will not be
-    # draw-for-draw identical to the jax.random sampler.
+    # draw-for-draw identical to the jax.random sampler. Composes with
+    # dist=: each data shard then runs the sampler on its own batch
+    # rows with the counter-hash folded by the shard's global row
+    # offset (same draws as the single-device fused sampler).
     fused_sampler: bool = False
     # dist=DistConfig(mesh, ...) routes the whole step through the
     # multi-device path (repro.dist.fopo): beta rows sharded over the
     # mesh `model` axis, batch over `data`, retrieval via the sharded
     # top-K merge, and the sample-tiled fused kernels running per
     # device with the SNIS score partials psum'd exactly once. Implies
-    # the fused kernels (the `fused` flag is moot on this path); not
-    # combinable with fused_sampler (yet — see ROADMAP).
-    dist: Any = None
-
-
-def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
-    if cfg.retriever == "exact":
-        return lambda h, beta: topk_exact(h, beta, cfg.top_k)
-    if cfg.retriever == "streaming":
-        from repro.mips.streaming import topk_streaming
-
-        block = kw.get("block_items", 4096)
-        return lambda h, beta: topk_streaming(h, beta, cfg.top_k, block_items=block)
-    if cfg.retriever == "pallas":
-        from repro.kernels.mips_topk import ops as mips_ops
-
-        interpret = kw.get("interpret", True)
-        return lambda h, beta: mips_ops.mips_topk(
-            h, beta, cfg.top_k, interpret=interpret
-        )
-    if cfg.retriever == "ivf":
-        index = kw["index"]  # prebuilt IVFIndex (Assumption 1: beta fixed)
-        n_probe = kw.get("n_probe", 8)
-        from repro.mips.ivf import ivf_query
-
-        return lambda h, beta: ivf_query(index, h, cfg.top_k, n_probe=n_probe)
-    if cfg.retriever == "sharded":
-        from repro.mips.sharded import make_sharded_topk_fn
-
-        fn = make_sharded_topk_fn(kw["mesh"], cfg.top_k, kw.get("axis", "model"))
-        return lambda h, beta: fn(h, beta)
-    raise ValueError(f"unknown retriever {cfg.retriever!r}")
+    # the fused kernels (the `fused` flag is moot on this path).
+    dist: "DistConfig | None" = None
 
 
 def fopo_loss(
@@ -102,72 +89,26 @@ def fopo_loss(
     beta: jnp.ndarray,  # [P, L] fixed item embeddings
     reward_fn,  # actions [B, S] -> [B, S]
     cfg: FOPOConfig,
-    retriever: Retriever,
+    retriever: Retriever | None = None,
     epsilon: float | jnp.ndarray | None = None,
+    *,
+    plan: ExecutionPlan | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Scalar surrogate loss whose grad is the SNIS covariance gradient.
 
-    With ``cfg.fused_sampler`` the mixture draws come from the Pallas
-    in-kernel sampler: actions/log_q arrive tile-aligned ([B, Sp] with
-    Sp a multiple of the sample tile, padded tail pre-masked) so the
-    fused covariance kernels consume them with a no-op pad. Dead slots
-    carry exactly zero weight, so the padded columns never contribute
-    to the loss, gradient, or diagnostics.
+    Resolves an `ExecutionPlan` from ``cfg`` (validating the knob
+    matrix) and runs its shared step skeleton; an injected ``retriever``
+    overrides the configured one (tests / prebuilt indexes), and a
+    prebuilt ``plan`` skips per-call resolution entirely (the trainer's
+    hot loop). With ``cfg.fused_sampler`` the mixture draws come from
+    the Pallas in-kernel sampler: actions/log_q arrive tile-aligned
+    ([B, Sp] with Sp a multiple of the sample tile, padded tail
+    pre-masked) so the fused covariance kernels consume them with a
+    no-op pad — dead slots carry exactly zero weight everywhere.
     """
-    if cfg.dist is not None:
-        # the multi-device path owns retrieval/sampling/step wiring;
-        # retriever=None selects its sharded top-K (injected retrievers
-        # pass through for tests)
-        from repro.dist.fopo import dist_fopo_loss
-
-        return dist_fopo_loss(
-            policy, params, key, x, beta, reward_fn, cfg,
-            retriever=retriever, epsilon=epsilon,
-        )
-    eps = cfg.epsilon if epsilon is None else epsilon
-    h = jax.lax.stop_gradient(policy.user_embedding(params, x))  # proposal side
-    tile = resolve_sample_tile(cfg.sample_tile, cfg.num_samples)
-    if isinstance(eps, float) and eps >= 1.0:
-        sample = UniformProposal(cfg.num_items).sample(key, x.shape[0], cfg.num_samples)
-    else:
-        topk = retriever(h, beta)
-        if cfg.fused_sampler:
-            interpret = cfg.fused_interpret
-            if interpret is None:
-                interpret = jax.default_backend() != "tpu"
-            actions, log_q, slots = fused_mixture_sample(
-                key, topk.indices, topk.scores,
-                num_samples=cfg.num_samples, epsilon=eps,
-                num_items=cfg.num_items, sample_tile=tile,
-                interpret=interpret,
-            )
-            sample = ProposalSample(actions=actions, log_q=log_q, topk_slot=slots)
-        else:
-            # single shared implementation, float or traced epsilon alike
-            prop = MixtureProposal(cfg.num_items, eps)
-            sample = prop.sample(key, topk.indices, topk.scores, cfg.num_samples)
-    # clamp keeps reward lookups in-bounds on pre-masked (padded) slots;
-    # their reward is zeroed and their SNIS weight is exactly 0 anyway
-    valid = sample.actions >= 0
-    rewards = jax.lax.stop_gradient(
-        reward_fn(jnp.maximum(sample.actions, 0)) * valid
-    )
-    loss, aux = covariance_surrogate(
-        policy, params, x, beta, sample.actions, sample.log_q, rewards,
-        fused=cfg.fused, fused_interpret=cfg.fused_interpret,
-        sample_tile=tile,
-    )
-    return loss, aux
-
-
-def _sample_mixture_traced(key, topk: TopK, s: int, eps, num_items: int):
-    """Deduped into `MixtureProposal` (which now accepts a traced
-    epsilon); kept as a shim because it documents the adaptive-schedule
-    entry point. Identical draws and log-pmf to the float-eps path at
-    equal key/eps (regression-tested)."""
-    return MixtureProposal(num_items, eps).sample(
-        key, topk.indices, topk.scores, s
-    )
+    if plan is None:
+        plan = ExecutionPlan.resolve(cfg, retriever=retriever)
+    return plan.execute(policy, params, key, x, beta, reward_fn, epsilon=epsilon)
 
 
 def reinforce_loss(

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import resolve_interpret
 from repro.core.policy import SoftmaxPolicy
 from repro.core.snis import (
     snis_covariance_coefficients,
@@ -128,16 +129,14 @@ def covariance_surrogate(
         # gradients to h only), kernels running per beta shard
         from repro.dist.fopo import dist_fused_covariance_loss
 
-        if fused_interpret is None:
-            fused_interpret = jax.default_backend() != "tpu"
+        fused_interpret = resolve_interpret(fused_interpret)
         h = policy.user_embedding(params, x)
         return dist_fused_covariance_loss(
             h, beta, actions, log_q, rewards,
             dist=dist, interpret=fused_interpret, sample_tile=sample_tile,
         )
     if fused:
-        if fused_interpret is None:
-            fused_interpret = jax.default_backend() != "tpu"
+        fused_interpret = resolve_interpret(fused_interpret)
         h = policy.user_embedding(params, x)  # [B, L] differentiable
         return fused_covariance_loss(
             h, beta, actions, log_q, rewards,

@@ -1,0 +1,328 @@
+"""The resolved ExecutionPlan of one FOPO training step.
+
+`FOPOConfig` is a knob matrix — `fused` / `fused_interpret` /
+`sample_tile` / `fused_sampler` / `retriever` / `dist` — and PRs 1-3
+resolved it ad hoc wherever a knob happened to be consumed: interpret
+mode in three places, the tile clamp in four, retriever construction in
+the trainer, sampler selection in `fopo_loss`, and single-vs-dist
+routing split between `fopo_loss` and `dist_fopo_loss`. This module
+collapses all of that into ONE frozen object resolved ONCE from
+(config, backend, mesh):
+
+  * validation    — every invalid knob combination fails at
+                    `ExecutionPlan.resolve`, before any tracing;
+  * resolution    — interpret mode (compiled Pallas on TPU, interpret
+                    fallback elsewhere), the `resolve_sample_tile`
+                    clamp, and retriever construction happen here and
+                    nowhere else;
+  * routing       — the plan knows which sampler (jax.random
+                    `MixtureProposal` vs the Pallas in-kernel
+                    `fused_mixture_sample`) and which surrogate
+                    (unfused jnp chain, fused custom_vjp kernels, or
+                    the multi-device `dist_fused_covariance_loss`)
+                    the step body runs;
+  * the skeleton  — `execute()` is the single
+                    retrieval -> sample -> weight -> reduce body shared
+                    by the single-device and multi-device paths (they
+                    differ only in which plan hooks fire, not in step
+                    structure).
+
+The previously forbidden `fused_sampler` x `dist` cell is closed: on
+the multi-device path the in-kernel sampler runs per data shard with
+its counter-hash PRNG folded by the shard's global batch-row offset
+(`repro.dist.fopo.dist_fused_mixture_sample`), so per-shard draws
+reproduce the single-device sampler stream exactly — independent
+streams per shard, reproducible across mesh shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.snis_covgrad.ops import resolve_sample_tile
+
+if TYPE_CHECKING:
+    from repro.core.fopo import FOPOConfig
+    from repro.core.proposals import ProposalSample
+    from repro.dist.fopo import DistConfig
+    from repro.mips.exact import TopK
+
+Retriever = Callable[[jnp.ndarray, jnp.ndarray], "TopK"]  # (h, beta) -> TopK
+
+RETRIEVERS = ("exact", "streaming", "ivf", "sharded", "pallas")
+
+
+def resolve_interpret(fused_interpret: bool | None, backend: str | None = None) -> bool:
+    """THE interpret-mode rule: an explicit setting wins; None selects
+    compiled Pallas on TPU and interpret mode everywhere else."""
+    if fused_interpret is not None:
+        return fused_interpret
+    return (backend or jax.default_backend()) != "tpu"
+
+
+def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
+    """Build the configured MIPS retriever (h, beta) -> TopK."""
+    if cfg.retriever == "exact":
+        from repro.mips.exact import topk_exact
+
+        return lambda h, beta: topk_exact(h, beta, cfg.top_k)
+    if cfg.retriever == "streaming":
+        from repro.mips.streaming import topk_streaming
+
+        block = kw.get("block_items", 4096)
+        return lambda h, beta: topk_streaming(h, beta, cfg.top_k, block_items=block)
+    if cfg.retriever == "pallas":
+        from repro.kernels.mips_topk import ops as mips_ops
+
+        interpret = kw.get("interpret", True)
+        return lambda h, beta: mips_ops.mips_topk(
+            h, beta, cfg.top_k, interpret=interpret
+        )
+    if cfg.retriever == "ivf":
+        index = kw["index"]  # prebuilt IVFIndex (Assumption 1: beta fixed)
+        n_probe = kw.get("n_probe", 8)
+        from repro.mips.ivf import ivf_query
+
+        return lambda h, beta: ivf_query(index, h, cfg.top_k, n_probe=n_probe)
+    if cfg.retriever == "sharded":
+        from repro.mips.sharded import make_sharded_topk_fn
+
+        fn = make_sharded_topk_fn(kw["mesh"], cfg.top_k, kw.get("axis", "model"))
+        return lambda h, beta: fn(h, beta)
+    raise ValueError(f"unknown retriever {cfg.retriever!r}")
+
+
+def _validate(cfg: FOPOConfig, *, injected_retriever: bool, retriever_kwargs: dict) -> None:
+    """Construction-time knob validation — every invalid combination
+    fails HERE, not deep inside a traced step body."""
+    if cfg.num_items <= 0:
+        raise ValueError(
+            "FOPOConfig.num_items must be resolved (> 0) before planning; "
+            "pass num_items= to ExecutionPlan.resolve or set it on the config"
+        )
+    if cfg.num_samples < 1:
+        raise ValueError(f"num_samples must be >= 1, got {cfg.num_samples}")
+    if cfg.top_k < 1:
+        raise ValueError(f"top_k must be >= 1, got {cfg.top_k}")
+    if isinstance(cfg.epsilon, (int, float)) and not 0.0 <= cfg.epsilon <= 1.0:
+        raise ValueError(f"epsilon must lie in [0, 1], got {cfg.epsilon}")
+    if cfg.dist is not None:
+        from repro.dist.fopo import DistConfig
+
+        if not isinstance(cfg.dist, DistConfig):
+            raise ValueError(
+                f"FOPOConfig.dist must be a DistConfig (or None), got "
+                f"{type(cfg.dist).__name__}"
+            )
+    if not injected_retriever and cfg.dist is None:
+        if cfg.retriever not in RETRIEVERS:
+            raise ValueError(
+                f"unknown retriever {cfg.retriever!r} (one of {RETRIEVERS})"
+            )
+        if cfg.retriever == "ivf" and "index" not in retriever_kwargs:
+            raise ValueError(
+                'retriever="ivf" needs a prebuilt index: pass '
+                "retriever_kwargs={'index': build_ivf(...)}"
+            )
+        if cfg.retriever == "sharded" and "mesh" not in retriever_kwargs:
+            raise ValueError(
+                'retriever="sharded" needs retriever_kwargs={"mesh": ...}'
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything `FOPOConfig` leaves implicit, resolved once.
+
+    Resolved-knob table (config -> plan -> which code runs):
+
+      cfg.fused_interpret  -> plan.interpret      compiled Pallas vs
+                                                  interpret-mode kernels
+      cfg.sample_tile      -> plan.sample_tile    clamped kernel tiling
+      cfg.retriever        -> plan.retriever      built (h, beta)->TopK
+                                                  (None: dist sharded
+                                                  top-K owns retrieval)
+      cfg.fused_sampler    -> plan.fused_sampler  Pallas in-kernel
+                                                  sampler vs jax.random
+                                                  MixtureProposal
+      cfg.fused / cfg.dist -> plan.fused          custom_vjp kernel step
+                                                  (dist implies fused)
+      cfg.dist             -> plan.dist           shard_map multi-device
+                                                  step vs single device
+    """
+
+    cfg: Any  # the normalized FOPOConfig (resolved knobs written back)
+    backend: str
+    interpret: bool
+    sample_tile: int
+    fused: bool
+    fused_sampler: bool
+    dist: DistConfig | None
+    retriever: Retriever | None
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def resolve(
+        cls,
+        cfg: FOPOConfig,
+        *,
+        num_items: int | None = None,
+        backend: str | None = None,
+        retriever: Retriever | None = None,
+        retriever_kwargs: dict | None = None,
+    ) -> "ExecutionPlan":
+        """Resolve config + backend + mesh into a frozen plan.
+
+        ``retriever`` injects a prebuilt retriever (tests; the recsys
+        towers) and skips retriever construction/validation; otherwise
+        the plan builds the configured one (``retriever_kwargs`` feeds
+        it, e.g. the IVF index). In dist mode with no injection the
+        sharded top-K merge owns retrieval (plan.retriever is None).
+        """
+        kw = retriever_kwargs or {}
+        backend = backend or jax.default_backend()
+        if num_items is not None and cfg.num_items == 0:
+            cfg = dataclasses.replace(cfg, num_items=num_items)
+        _validate(cfg, injected_retriever=retriever is not None, retriever_kwargs=kw)
+        tile = resolve_sample_tile(cfg.sample_tile, cfg.num_samples)
+        interpret = resolve_interpret(cfg.fused_interpret, backend)
+        uses_kernels = cfg.fused or cfg.fused_sampler or cfg.dist is not None
+        # write the resolved knobs back so checkpoints/logs/downstream
+        # consumers of plan.cfg see what actually runs
+        if tile != cfg.sample_tile:
+            cfg = dataclasses.replace(cfg, sample_tile=tile)
+        if uses_kernels and cfg.fused_interpret is None:
+            cfg = dataclasses.replace(cfg, fused_interpret=interpret)
+        if retriever is None and cfg.dist is None:
+            retriever = make_retriever(cfg, **kw)
+        return cls(
+            cfg=cfg,
+            backend=backend,
+            interpret=interpret,
+            sample_tile=tile,
+            fused=bool(cfg.fused or cfg.dist is not None),
+            fused_sampler=bool(cfg.fused_sampler),
+            dist=cfg.dist,
+            retriever=retriever,
+        )
+
+    # ------------------------------------------------------------------
+    # the shared step skeleton: retrieval -> sample -> weight -> reduce
+    # ------------------------------------------------------------------
+    def execute(
+        self,
+        policy,
+        params,
+        key: jax.Array,
+        x: jnp.ndarray,  # [B, Dx]
+        beta: jnp.ndarray,  # [P, L] fixed item embeddings
+        reward_fn,  # actions [B, S] -> [B, S]
+        epsilon: float | jnp.ndarray | None = None,
+    ) -> tuple[jnp.ndarray, dict]:
+        """One Algorithm-1 step body — the SAME skeleton on one device
+        and on the mesh; the plan hooks decide which retriever, sampler
+        and surrogate fire. Returns (loss, aux)."""
+        eps = self.cfg.epsilon if epsilon is None else epsilon
+        h_prop = jax.lax.stop_gradient(policy.user_embedding(params, x))
+        sample = self.draw(key, h_prop, beta, eps)
+        # clamp keeps reward lookups in-bounds on pre-masked (padded)
+        # slots; their reward is zeroed and their SNIS weight is 0
+        valid = sample.actions >= 0
+        rewards = jax.lax.stop_gradient(
+            reward_fn(jnp.maximum(sample.actions, 0)) * valid
+        )
+        return self.surrogate(policy, params, x, beta, sample, rewards)
+
+    # -- retrieval ------------------------------------------------------
+    def retrieve(self, h_prop: jnp.ndarray, beta: jnp.ndarray) -> "TopK":
+        if self.retriever is not None:
+            return self.retriever(h_prop, beta)
+        from repro.dist.fopo import dist_sharded_topk
+
+        return dist_sharded_topk(
+            h_prop, beta, self.cfg.top_k, self.dist, num_items=self.cfg.num_items
+        )
+
+    # -- sampling -------------------------------------------------------
+    def draw(self, key, h_prop, beta, eps) -> "ProposalSample":
+        """Step 4: S proposal draws per context. A static (python
+        number) eps >= 1 short-circuits retrieval entirely (pure
+        uniform proposal); a traced eps takes the mixture route, which
+        reproduces the uniform pmf exactly at eps == 1."""
+        if isinstance(eps, (int, float)) and eps >= 1.0:
+            return self._draw_uniform(key, h_prop.shape[0])
+        topk = self.retrieve(h_prop, beta)
+        return self._draw_mixture(key, topk, eps)
+
+    def _draw_uniform(self, key, batch: int) -> "ProposalSample":
+        from repro.core.proposals import UniformProposal
+
+        prop = UniformProposal(self.cfg.num_items)
+        if self.dist is None:
+            return prop.sample(key, batch, self.cfg.num_samples)
+        from repro.dist.fopo import _sample_replicated
+
+        return _sample_replicated(
+            self.dist,
+            lambda k: prop.sample(k, batch, self.cfg.num_samples),
+            key,
+        )
+
+    def _draw_mixture(self, key, topk: "TopK", eps) -> "ProposalSample":
+        cfg = self.cfg
+        if self.fused_sampler:
+            if self.dist is None:
+                from repro.core.proposals import ProposalSample
+                from repro.kernels.fused_sampler import fused_mixture_sample
+
+                actions, log_q, slots = fused_mixture_sample(
+                    key, topk.indices, topk.scores,
+                    num_samples=cfg.num_samples, epsilon=eps,
+                    num_items=cfg.num_items, sample_tile=self.sample_tile,
+                    interpret=self.interpret,
+                )
+                return ProposalSample(actions=actions, log_q=log_q, topk_slot=slots)
+            from repro.dist.fopo import dist_fused_mixture_sample
+
+            return dist_fused_mixture_sample(
+                key, topk,
+                num_samples=cfg.num_samples, epsilon=eps,
+                num_items=cfg.num_items, sample_tile=self.sample_tile,
+                interpret=self.interpret, dist=self.dist,
+            )
+        from repro.core.proposals import MixtureProposal
+
+        if self.dist is None:
+            # single shared implementation, float or traced epsilon alike
+            return MixtureProposal(cfg.num_items, eps).sample(
+                key, topk.indices, topk.scores, cfg.num_samples
+            )
+        from repro.dist.fopo import _sample_replicated
+
+        # eps rides along as an operand so traced schedules work; the
+        # traced-eps route draws identically to the float one
+        return _sample_replicated(
+            self.dist,
+            lambda k, idx, sc, e: MixtureProposal(cfg.num_items, e).sample(
+                k, idx, sc, cfg.num_samples
+            ),
+            key, topk.indices, topk.scores, jnp.asarray(eps, jnp.float32),
+        )
+
+    # -- weighting + reduction ------------------------------------------
+    def surrogate(
+        self, policy, params, x, beta, sample: "ProposalSample", rewards
+    ) -> tuple[jnp.ndarray, dict]:
+        """Step 5: SNIS weights + covariance-gradient surrogate.
+        `covariance_surrogate` owns the unfused/fused/dist dispatch —
+        the plan just hands it the resolved knobs."""
+        from repro.core.gradients import covariance_surrogate
+
+        return covariance_surrogate(
+            policy, params, x, beta, sample.actions, sample.log_q, rewards,
+            fused=self.fused, fused_interpret=self.interpret,
+            sample_tile=self.sample_tile, dist=self.dist,
+        )

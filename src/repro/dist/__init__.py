@@ -38,11 +38,17 @@ __all__ = [
     "DistConfig",
     "dist_fopo_loss",
     "dist_fused_covariance_loss",
+    "dist_fused_mixture_sample",
 ]
 
 
 def __getattr__(name):  # lazy: avoid importing the kernel stack on spec-only use
-    if name in ("DistConfig", "dist_fopo_loss", "dist_fused_covariance_loss"):
+    if name in (
+        "DistConfig",
+        "dist_fopo_loss",
+        "dist_fused_covariance_loss",
+        "dist_fused_mixture_sample",
+    ):
         from repro.dist import fopo as _fopo
 
         return getattr(_fopo, name)

@@ -9,7 +9,14 @@ sample-tiled Pallas kernels as the per-device compute:
   1. retrieval — `mips.sharded.sharded_topk` per beta shard + global
      K-merge (communication O(n * B * K), never O(P));
   2. sampling — the eps-mixture draws run on the merged top-K exactly
-     as in the single-device path (same keys => same draws);
+     as in the single-device path (same keys => same draws). With
+     `fused_sampler` the draws instead come from the Pallas in-kernel
+     sampler running PER DATA SHARD (`dist_fused_mixture_sample`): its
+     counter-hash PRNG is keyed by the global batch row (the shard's
+     `data`-axis index times its local batch), so each shard emits
+     exactly the rows the single-device kernel would — no (B, S, K)
+     Gumbel tensor anywhere, streams disjoint across shards and
+     reproducible across mesh shapes;
   3. id routing — each device needs every sampled id to decide which
      rows it owns: an all-gather of the (B, S) id tensor along `model`
      (`collectives.gather_samples`), then local-id rebasing
@@ -51,7 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.policy import SoftmaxPolicy
-from repro.core.proposals import MixtureProposal, UniformProposal
+from repro.core.proposals import ProposalSample
 from repro.core.snis import snis_covariance_coefficients, snis_diagnostics
 from repro.dist.collectives import (
     gather_samples,
@@ -369,8 +376,6 @@ def _sample_replicated(dist: DistConfig, local_fn, *arrays):
     jit partitions the sampling ops over the mesh — same distribution,
     different trajectory, no error (caught by the dist-vs-single
     trainer parity test)."""
-    from repro.core.proposals import ProposalSample
-
     return shard_map(
         local_fn,
         mesh=dist.mesh,
@@ -378,6 +383,74 @@ def _sample_replicated(dist: DistConfig, local_fn, *arrays):
         out_specs=ProposalSample(actions=P(), log_q=P(), topk_slot=P()),
         check_vma=False,
     )(*arrays)
+
+
+def dist_fused_mixture_sample(
+    key: jax.Array,
+    topk: TopK,  # indices/scores [B, K] — batch-sharded over `data`
+    *,
+    num_samples: int,
+    epsilon,  # float or traced jnp scalar
+    num_items: int,
+    sample_tile: int,
+    dist: DistConfig,
+    interpret: bool = True,
+) -> ProposalSample:
+    """The Pallas in-kernel eps-mixture sampler on the mesh: one kernel
+    launch per data shard, over that shard's local top-K rows.
+
+    The kernel's counter-hash PRNG is keyed by the GLOBAL batch row —
+    each shard passes ``row_offset = axis_index(data) * B_local`` — so
+    shard d draws bit-exactly rows [d*B_local, (d+1)*B_local) of the
+    single-device sampler stream at the same key: streams are disjoint
+    across shards by construction and the assembled (B, Sp) draw is
+    invariant to the mesh shape (hash-twin-tested against
+    `fused_sampler_ref`). The int32 kernel seed is folded from the key
+    ONCE outside shard_map (a scalar — nothing for the partitioner to
+    reshard), then broadcast replicated.
+
+    Outputs are tile-aligned [B, Sp] (Sp = ceil(S/TS)*TS, padded tail
+    pre-masked) and flow straight into the existing id routing: the
+    all-gather/rebase machinery of `dist_fused_covariance_loss` treats
+    them exactly like jax.random draws.
+    """
+    b = topk.indices.shape[0]
+    if b % dist.n_data:
+        raise ValueError(
+            f"batch {b} must be a multiple of the data-axis size "
+            f"({dist.n_data})"
+        )
+    b_local = b // dist.n_data
+    from repro.kernels.fused_sampler import fused_sampler_pallas, key_to_seed
+
+    seed = key_to_seed(key)
+
+    def local(seed_, eps_, idx, sc):
+        off = jax.lax.axis_index(dist.data_axis) * b_local
+        actions, log_q, slots = fused_sampler_pallas(
+            seed_[0], eps_[0], idx, sc,
+            num_samples=num_samples, num_items=num_items,
+            sample_tile=sample_tile, interpret=interpret,
+            row_offset=off,
+        )
+        return ProposalSample(actions=actions, log_q=log_q, topk_slot=slots)
+
+    return shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(P(None), P(None), P(dist.data_axis, None), P(dist.data_axis, None)),
+        out_specs=ProposalSample(
+            actions=P(dist.data_axis, None),
+            log_q=P(dist.data_axis, None),
+            topk_slot=P(dist.data_axis, None),
+        ),
+        check_vma=False,
+    )(
+        seed.reshape(1),
+        jnp.asarray(epsilon, jnp.float32).reshape(1),
+        topk.indices,
+        topk.scores,
+    )
 
 
 def dist_fopo_loss(
@@ -391,54 +464,16 @@ def dist_fopo_loss(
     retriever=None,  # optional injected retriever (tests); None -> sharded
     epsilon: float | jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, dict]:
-    """Algorithm 1 on the mesh. Sampling uses the same MixtureProposal /
-    UniformProposal draws as the single-device path (identical keys =>
-    identical actions), so dist-vs-single parity is exact end to end.
-    The in-kernel `fused_sampler` is not wired here yet (its tile-
-    aligned stream is per-device; the routing story is the remote-DMA
-    follow-on)."""
-    dist: DistConfig = cfg.dist
-    if cfg.fused_sampler:
-        raise ValueError(
-            "FOPOConfig(fused_sampler=True) is not supported with dist=; "
-            "the dist step samples via MixtureProposal"
-        )
-    eps = cfg.epsilon if epsilon is None else epsilon
-    interpret = cfg.fused_interpret
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    tile = resolve_sample_tile(cfg.sample_tile, cfg.num_samples)
+    """Algorithm 1 on the mesh — the `ExecutionPlan` skeleton with the
+    dist hooks resolved (kept as the dist-level entry point; new code
+    should resolve a plan once and call ``plan.execute``). jax.random
+    sampling uses the same MixtureProposal / UniformProposal draws as
+    the single-device path (identical keys => identical actions); with
+    ``cfg.fused_sampler`` the per-data-shard in-kernel sampler draws
+    the identical stream the single-device fused sampler does (see
+    `dist_fused_mixture_sample`). Either way dist-vs-single parity is
+    exact end to end."""
+    from repro.core.plan import ExecutionPlan
 
-    h_prop = jax.lax.stop_gradient(policy.user_embedding(params, x))
-    if isinstance(eps, float) and eps >= 1.0:
-        batch, s = x.shape[0], cfg.num_samples
-        sample = _sample_replicated(
-            dist,
-            lambda k: UniformProposal(cfg.num_items).sample(k, batch, s),
-            key,
-        )
-    else:
-        if retriever is not None:
-            topk = retriever(h_prop, beta)
-        else:
-            topk = dist_sharded_topk(
-                h_prop, beta, cfg.top_k, dist, num_items=cfg.num_items
-            )
-        # eps rides along as an operand so traced schedules work; the
-        # traced-eps route draws identically to the float one
-        sample = _sample_replicated(
-            dist,
-            lambda k, idx, sc, e: MixtureProposal(cfg.num_items, e).sample(
-                k, idx, sc, cfg.num_samples
-            ),
-            key, topk.indices, topk.scores, jnp.asarray(eps, jnp.float32),
-        )
-    valid = sample.actions >= 0
-    rewards = jax.lax.stop_gradient(
-        reward_fn(jnp.maximum(sample.actions, 0)) * valid
-    )
-    h = policy.user_embedding(params, x)
-    return dist_fused_covariance_loss(
-        h, beta, sample.actions, sample.log_q, rewards,
-        dist=dist, interpret=interpret, sample_tile=tile,
-    )
+    plan = ExecutionPlan.resolve(cfg, retriever=retriever)
+    return plan.execute(policy, params, key, x, beta, reward_fn, epsilon=epsilon)

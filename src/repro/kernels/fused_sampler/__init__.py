@@ -12,7 +12,7 @@ jax.random chain and arrive pre-padded for the covariance step.
   ref.py    — exact hash twin + `MixtureProposal`-backed distributional ref
 """
 from repro.kernels.fused_sampler.kernel import fused_sampler_pallas
-from repro.kernels.fused_sampler.ops import fused_mixture_sample
+from repro.kernels.fused_sampler.ops import fused_mixture_sample, key_to_seed
 from repro.kernels.fused_sampler.ref import (
     fused_mixture_sample_ref,
     fused_sampler_ref,
@@ -23,4 +23,5 @@ __all__ = [
     "fused_sampler_pallas",
     "fused_sampler_ref",
     "fused_mixture_sample_ref",
+    "key_to_seed",
 ]

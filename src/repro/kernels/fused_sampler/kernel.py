@@ -37,8 +37,18 @@ pre-masked — action = -1, log_q = LOG_Q_PAD — exactly the dead-slot
 convention the covgrad kernels consume.
 
 eps arrives as a (1, 1) operand so adaptive (traced) epsilon schedules
-work unchanged; only 0 <= eps < 1 reaches this kernel (`fopo_loss`
-short-circuits the eps >= 1 uniform proposal before retrieval).
+work unchanged; only 0 <= eps < 1 reaches this kernel (the execution
+plan short-circuits the float eps >= 1 uniform proposal before
+retrieval — a *traced* eps may pass through at any value, which the
+arm selection and logaddexp combine handle exactly).
+
+The counter hash is keyed by the GLOBAL batch row: ``row_offset``
+(a (1, 1) operand, 0 on one device) shifts the grid's batch index, so
+a data shard running rows [off, off + B_local) draws the exact stream
+the single-device kernel draws for those rows — per-shard streams are
+disjoint by construction (disjoint counter blocks) and reproducible
+across mesh shapes (the counter depends only on the global row, the
+global sample position and K).
 """
 from __future__ import annotations
 
@@ -79,6 +89,7 @@ def _uniform01(seed: jnp.ndarray, ctr: jnp.ndarray) -> jnp.ndarray:
 def _fused_sampler_kernel(
     seed_ref,  # (1, 1) int32 — per-call PRNG seed
     eps_ref,  # (1, 1) float32 — mixture epsilon (may be traced upstream)
+    off_ref,  # (1, 1) int32 — global row offset of this batch shard
     idx_ref,  # (1, K) int32 — top-K ids for context b (resident)
     scores_ref,  # (1, K) float32 — top-K scores for context b (resident)
     actions_ref,  # (1, TS) int32 out
@@ -90,7 +101,9 @@ def _fused_sampler_kernel(
     num_items: int,
     top_k: int,
 ):
-    i = pl.program_id(0)
+    # GLOBAL batch row: local grid row + shard offset, so the counter
+    # stream is mesh-shape-invariant (see module docstring)
+    i = pl.program_id(0) + off_ref[0, 0]
     j = pl.program_id(1)
     num_j = pl.num_programs(1)
     ts, k = sample_tile, top_k
@@ -166,9 +179,14 @@ def fused_sampler_pallas(
     num_items: int,
     sample_tile: int,
     interpret: bool = False,
+    row_offset: int | jnp.ndarray = 0,
 ):
     """Returns (actions [B, Sp], log_q [B, Sp], topk_slot [B, Sp]) with
-    Sp = ceil(S / TS) * TS; positions >= S are pre-masked dead slots."""
+    Sp = ceil(S / TS) * TS; positions >= S are pre-masked dead slots.
+    ``row_offset`` keys the counter hash by global batch row (see the
+    module docstring): with offset o this call draws exactly the rows
+    [o, o + B) of the offset-0 stream — the dist path's per-shard
+    sampler."""
     b, k = topk_indices.shape
     ts = sample_tile
     num_j = -(-num_samples // ts)
@@ -186,6 +204,7 @@ def fused_sampler_pallas(
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # seed
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # eps
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # row offset
             pl.BlockSpec((1, k), lambda i, j: (i, 0)),  # top-K ids (resident)
             pl.BlockSpec((1, k), lambda i, j: (i, 0)),  # top-K scores
         ],
@@ -206,6 +225,7 @@ def fused_sampler_pallas(
     )(
         seed.reshape(1, 1).astype(jnp.int32),
         jnp.asarray(epsilon, jnp.float32).reshape(1, 1),
+        jnp.asarray(row_offset, jnp.int32).reshape(1, 1),
         topk_indices.astype(jnp.int32),
         topk_scores.astype(jnp.float32),
     )

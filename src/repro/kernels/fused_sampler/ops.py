@@ -22,6 +22,15 @@ import jax.numpy as jnp
 from repro.kernels.fused_sampler.kernel import fused_sampler_pallas
 
 
+def key_to_seed(key: jax.Array) -> jnp.ndarray:
+    """THE key -> int32 kernel-seed fold. One definition so every
+    caller (single-device wrapper, dist per-shard sampler, tests)
+    derives the identical seed from the same key."""
+    return jax.random.randint(
+        key, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_samples", "num_items", "sample_tile", "interpret"),
@@ -36,14 +45,17 @@ def fused_mixture_sample(
     num_items: int,
     sample_tile: int,
     interpret: bool = True,
+    row_offset: int | jnp.ndarray = 0,
 ):
     """Draw S eps-mixture actions per context in-kernel; returns
-    (actions [B, Sp], log_q [B, Sp], topk_slot [B, Sp])."""
+    (actions [B, Sp], log_q [B, Sp], topk_slot [B, Sp]). ``row_offset``
+    shifts the counter hash's batch-row key: a batch shard holding
+    global rows [o, o + B) passes o and draws exactly those rows of
+    the full-batch stream (how the dist path keeps per-shard streams
+    disjoint AND mesh-shape-reproducible)."""
     # fold the jax key into the kernel's counter-hash seed; consuming
     # the key here keeps the usual "split per step" discipline upstream
-    seed = jax.random.randint(
-        key, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
-    )
+    seed = key_to_seed(key)
     return fused_sampler_pallas(
         seed,
         jnp.asarray(epsilon, jnp.float32),
@@ -53,4 +65,5 @@ def fused_mixture_sample(
         num_items=num_items,
         sample_tile=sample_tile,
         interpret=interpret,
+        row_offset=row_offset,
     )

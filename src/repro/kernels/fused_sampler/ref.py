@@ -33,8 +33,10 @@ def fused_sampler_ref(
     num_samples: int,
     num_items: int,
     sample_tile: int,
+    row_offset: int = 0,
 ):
-    """Pure-jnp twin of `fused_sampler_pallas` (same hash, same draws)."""
+    """Pure-jnp twin of `fused_sampler_pallas` (same hash, same draws,
+    same global-batch-row counter keying via ``row_offset``)."""
     b, k = topk_indices.shape
     ts = sample_tile
     num_j = -(-num_samples // ts)
@@ -43,7 +45,7 @@ def fused_sampler_ref(
     eps = jnp.asarray(epsilon, jnp.float32)
 
     pos = jnp.arange(sp, dtype=jnp.int32)[None, :]  # [1, Sp]
-    batch_ix = jnp.arange(b, dtype=jnp.int32)[:, None]  # [B, 1]
+    batch_ix = row_offset + jnp.arange(b, dtype=jnp.int32)[:, None]  # [B, 1]
     live = pos < num_samples
     ctr0 = ((batch_ix * sp + pos) * (k + 2)).astype(jnp.uint32)  # [B, Sp]
 

@@ -17,14 +17,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fopo import FOPOConfig, fopo_loss, make_retriever, reinforce_loss
+from repro.core.fopo import FOPOConfig, fopo_loss, reinforce_loss
 from repro.core.gradients import exact_objective
+from repro.core.plan import ExecutionPlan
 from repro.core.policy import SoftmaxPolicy, linear_tower_apply, linear_tower_init
 from repro.core.proposals import adaptive_epsilon
 from repro.core.rewards import make_session_reward
 from repro.data.loader import BatchLoader
 from repro.data.synthetic import SessionDataset
-from repro.kernels.snis_covgrad.ops import resolve_sample_tile
 from repro.mips.exact import topk_exact
 from repro.optim.optimizers import Optimizer, adam, clip_by_global_norm
 from repro.train import checkpoint as ckpt
@@ -62,23 +62,20 @@ class FOPOTrainer:
         fopo_cfg = cfg.fopo
         if fopo_cfg.num_items == 0:
             fopo_cfg = dataclasses.replace(fopo_cfg, num_items=p)
-        if fopo_cfg.dist is not None and fopo_cfg.fused_sampler:
-            raise ValueError(
-                "FOPOConfig(fused_sampler=True) is not supported with dist="
+        if cfg.estimator == "fopo":
+            # resolve the whole knob matrix ONCE at wiring time:
+            # interpret mode, tile clamp, retriever construction,
+            # sampler selection, single-vs-dist routing — and fail
+            # invalid knob combinations here, before any tracing
+            self.plan = ExecutionPlan.resolve(
+                fopo_cfg, retriever_kwargs=retriever_kwargs or {}
             )
-        if (
-            fopo_cfg.fused or fopo_cfg.fused_sampler
-            or fopo_cfg.dist is not None
-        ) and fopo_cfg.fused_interpret is None:
-            # resolve the fused-kernel execution mode once, at wiring
-            # time: compiled Pallas on TPU, interpret fallback elsewhere
-            fopo_cfg = dataclasses.replace(
-                fopo_cfg, fused_interpret=jax.default_backend() != "tpu"
-            )
-        # resolve the kernel sample tile once, by the shared clamp rule
-        tile = resolve_sample_tile(fopo_cfg.sample_tile, fopo_cfg.num_samples)
-        if tile != fopo_cfg.sample_tile:
-            fopo_cfg = dataclasses.replace(fopo_cfg, sample_tile=tile)
+            fopo_cfg = self.plan.cfg
+            self.retriever = self.plan.retriever
+        else:
+            # reinforce / exact read num_samples off the config only
+            self.plan = None
+            self.retriever = None
         if fopo_cfg is not cfg.fopo:
             cfg = dataclasses.replace(cfg, fopo=fopo_cfg)
             self.cfg = cfg
@@ -105,13 +102,6 @@ class FOPOTrainer:
             cfg.batch_size,
             seed=cfg.seed,
         )
-        kw = retriever_kwargs or {}
-        if cfg.estimator == "fopo" and cfg.fopo.dist is None:
-            self.retriever = make_retriever(cfg.fopo, **kw)
-        else:
-            # dist mode: fopo_loss routes to repro.dist.fopo, which owns
-            # retrieval (sharded top-K merge over the beta shards)
-            self.retriever = None
         self._train_step = self._build_step()
 
     # ------------------------------------------------------------------
@@ -127,6 +117,7 @@ class FOPOTrainer:
                     policy, params, key, contexts, beta, reward_fn,
                     cfg.fopo, self.retriever,
                     epsilon=eps if cfg.adaptive_eps else None,
+                    plan=self.plan,  # resolved once in __init__
                 )
                 return loss, aux
             if cfg.estimator == "reinforce":

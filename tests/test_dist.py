@@ -375,9 +375,13 @@ def test_dist_trainer_smoke(dist22):
     assert all(np.isfinite(v) for v in hist["loss"])
 
 
-def test_fused_sampler_rejected_with_dist_config():
-    """Config error fires everywhere (no devices needed): the trainer
-    rejects fused_sampler + dist before any mesh use."""
+def test_garbage_dist_config_rejected():
+    """Config error fires everywhere (no devices needed): ExecutionPlan
+    validation — which replaced the duplicated trainer/dist
+    fused_sampler x dist ValueError guards — rejects a non-DistConfig
+    dist before any mesh use. (fused_sampler + dist itself is now a
+    supported combination; see the dist fused-sampler tests above and
+    tests/test_plan.py.)"""
     from repro.core.fopo import FOPOConfig
 
     class _FakeDist:
@@ -392,8 +396,146 @@ def test_fused_sampler_rejected_with_dist_config():
         )
     )
     fopo = FOPOConfig(num_items=0, fused_sampler=True, dist=_FakeDist())
-    with pytest.raises(ValueError, match="fused_sampler"):
+    with pytest.raises(ValueError, match="DistConfig"):
         FOPOTrainer(TrainerConfig(estimator="fopo", fopo=fopo), ds)
+
+
+# ---------------------------------------------------------------------------
+# the closed forbidden cell: fused_sampler x dist
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_dist_fused_sampler_hash_twin(dist22):
+    """Per-shard in-kernel draws ARE the single-device sampler stream:
+    the assembled (B, Sp) dist output equals the pure-jnp hash twin of
+    the single-device kernel (row_offset 0) bit for bit — each data
+    shard reproduced exactly its global rows, so streams are disjoint
+    across shards and invariant to the mesh shape."""
+    from repro.dist.fopo import dist_fused_mixture_sample
+    from repro.kernels.fused_sampler import (
+        fused_mixture_sample,
+        fused_sampler_ref,
+        key_to_seed,
+    )
+    from repro.mips.exact import TopK
+
+    b, p, k, s, ts, eps = 4, 500, 16, 37, 8, 0.45
+    ks = jax.random.split(jax.random.PRNGKey(31), 2)
+    scores = jax.random.normal(ks[0], (b, k)) * 2
+    ids = jnp.stack(
+        [jax.random.permutation(jax.random.PRNGKey(40 + i), p)[:k]
+         for i in range(b)]
+    ).astype(jnp.int32)
+    key = jax.random.PRNGKey(13)
+
+    out = dist_fused_mixture_sample(
+        key, TopK(scores=scores, indices=ids),
+        num_samples=s, epsilon=eps, num_items=p, sample_tile=ts,
+        dist=dist22, interpret=True,
+    )
+    ra, rq, rs = fused_sampler_ref(
+        key_to_seed(key), eps, ids, scores,
+        num_samples=s, num_items=p, sample_tile=ts,
+    )
+    np.testing.assert_array_equal(np.asarray(out.actions), np.asarray(ra))
+    np.testing.assert_allclose(
+        np.asarray(out.log_q), np.asarray(rq), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(out.topk_slot), np.asarray(rs))
+    # ... and hence equals the single-device kernel's stream exactly
+    sa, sq, _ = fused_mixture_sample(
+        key, ids, scores, num_samples=s, epsilon=eps, num_items=p,
+        sample_tile=ts, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out.actions), np.asarray(sa))
+    np.testing.assert_allclose(
+        np.asarray(out.log_q), np.asarray(sq), rtol=1e-6, atol=1e-6
+    )
+
+
+@multi_device
+def test_dist_fused_sampler_loss_and_grads_match_single_device(dist22):
+    """fopo_loss(dist=..., fused_sampler=True) == the single-device
+    fused-sampler path at equal keys: identical in-kernel draws (hash
+    twin above) -> loss to ~1e-6 (reduction reassociation only) and
+    user-tower grads to <= 1e-5 — the established dist parity bar, now
+    on the fastest sampler instead of the jax.random fallback."""
+    import dataclasses
+
+    from repro.core.fopo import FOPOConfig, fopo_loss, make_retriever
+    from repro.core.rewards import make_session_reward
+
+    policy, params, x, beta, _, _, _ = _problem(8, b=6, l=16, p=501)
+    positives = jax.random.randint(
+        jax.random.PRNGKey(9), (6, 8), 0, 501, dtype=jnp.int32
+    )
+    reward_fn = make_session_reward(positives)
+    cfg1 = FOPOConfig(
+        num_items=501, num_samples=50, top_k=32, epsilon=0.5,
+        retriever="streaming", fused=True, fused_sampler=True,
+        fused_interpret=True, sample_tile=8,
+    )
+    cfgd = dataclasses.replace(cfg1, dist=dist22)
+    retr = make_retriever(cfg1)
+    key = jax.random.PRNGKey(7)
+
+    l1, aux1 = fopo_loss(policy, params, key, x, beta, reward_fn, cfg1, retr)
+    l2, aux2 = fopo_loss(policy, params, key, x, beta, reward_fn, cfgd, None)
+    np.testing.assert_allclose(float(l2), float(l1), rtol=1e-6)
+    for k in aux1:
+        np.testing.assert_allclose(float(aux2[k]), float(aux1[k]), rtol=1e-6)
+
+    g1 = jax.grad(
+        lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfg1, retr)[0]
+    )(params)
+    g2 = jax.grad(
+        lambda pp: fopo_loss(policy, pp, key, x, beta, reward_fn, cfgd, None)[0]
+    )(params)
+    np.testing.assert_allclose(
+        np.asarray(g2["w"]), np.asarray(g1["w"]), rtol=1e-5, atol=1e-6
+    )
+
+
+@multi_device
+def test_dist_trainer_fused_sampler_trajectory_matches_single_device(dist22):
+    """FOPOConfig(dist=..., fused_sampler=True) trains end to end under
+    jit on the 2x2 mesh and walks the same parameter trajectory as the
+    single-device fused-sampler trainer (same seeds/data: the row-offset
+    counter fold makes the in-kernel draws identical)."""
+    import dataclasses
+
+    from repro.core.fopo import FOPOConfig
+    from repro.data import SyntheticConfig, generate_sessions
+    from repro.train import FOPOTrainer, TrainerConfig
+
+    ds = generate_sessions(
+        SyntheticConfig(
+            num_items=400, num_users=128, embed_dim=16, session_len=8, seed=1
+        )
+    )
+    base = FOPOConfig(
+        num_items=400, num_samples=48, top_k=24, epsilon=0.8,
+        retriever="exact", fused=True, fused_sampler=True, sample_tile=16,
+    )
+    tc = dict(batch_size=8, learning_rate=3e-3, num_steps=4, checkpoint_every=0)
+    tr1 = FOPOTrainer(TrainerConfig(estimator="fopo", fopo=base, **tc), ds)
+    tr2 = FOPOTrainer(
+        TrainerConfig(
+            estimator="fopo",
+            fopo=dataclasses.replace(
+                base, retriever="streaming", fused=False, dist=dist22
+            ),
+            **tc,
+        ),
+        ds,
+    )
+    h1 = tr1.train(4)
+    h2 = tr2.train(4)
+    np.testing.assert_allclose(h2["loss"], h1["loss"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(tr2.params["w"]), np.asarray(tr1.params["w"]),
+        rtol=1e-4, atol=1e-6,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.core import FOPOConfig, covariance_surrogate, fopo_loss, make_retriever
-from repro.core.fopo import _sample_mixture_traced
 from repro.core.gradients import fused_covariance_loss
 from repro.core.policy import SoftmaxPolicy, linear_tower_apply, linear_tower_init
 from repro.core.proposals import MixtureProposal
@@ -275,7 +274,9 @@ def test_trainer_fused_sampler_end_to_end():
 def test_traced_eps_sampling_matches_float_eps():
     """Regression for the traced-epsilon cleanup: at the same key and
     epsilon value, the float-eps MixtureProposal path and the traced-eps
-    path draw identical actions and identical log-pmf."""
+    path (the SAME MixtureProposal, jit'd over a traced epsilon — the
+    deduped `_sample_mixture_traced` shim is gone) draw identical
+    actions and identical log-pmf."""
     policy, params, x, beta, _, _, _ = _problem(jax.random.PRNGKey(11))
     h = policy.user_embedding(params, x)
     topk = topk_exact(h, beta, 24)
@@ -286,7 +287,9 @@ def test_traced_eps_sampling_matches_float_eps():
     prop = MixtureProposal(beta.shape[0], eps)
     ref = prop.sample(key, topk.indices, topk.scores, s)
     traced = jax.jit(
-        lambda e: _sample_mixture_traced(key, topk, s, e, beta.shape[0])
+        lambda e: MixtureProposal(beta.shape[0], e).sample(
+            key, topk.indices, topk.scores, s
+        )
     )(jnp.float32(eps))
 
     np.testing.assert_array_equal(np.asarray(ref.actions), np.asarray(traced.actions))

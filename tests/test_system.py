@@ -86,3 +86,55 @@ def test_adaptive_epsilon_mode(dataset):
     r0 = tr.evaluate(test_ds)
     tr.train(80)
     assert tr.evaluate(test_ds) > r0
+
+
+def test_adaptive_epsilon_fused_matches_unfused_trajectory(dataset):
+    """The traced-eps schedule on the FUSED kernel path: epsilon enters
+    the jitted step as a traced operand and the mixture draws are
+    identical to the unfused path's (same MixtureProposal, same keys),
+    so the adaptive-eps parameter trajectory must match step for step."""
+    train_ds, _ = dataset
+
+    def run(fused):
+        fopo = FOPOConfig(
+            num_items=2000, num_samples=64, top_k=32, retriever="exact",
+            fused=fused, sample_tile=16,
+        )
+        tc = TrainerConfig(
+            estimator="fopo", fopo=fopo, batch_size=16, learning_rate=3e-3,
+            num_steps=6, adaptive_eps=True, checkpoint_every=0, seed=0,
+        )
+        tr = FOPOTrainer(tc, train_ds)
+        hist = tr.train(6)
+        return tr, hist
+
+    tr_f, hist_f = run(True)
+    tr_u, hist_u = run(False)
+    assert np.all(np.isfinite(hist_f["loss"]))
+    np.testing.assert_allclose(hist_f["loss"], hist_u["loss"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(tr_f.params["w"]), np.asarray(tr_u.params["w"]),
+        rtol=1e-4, atol=1e-6,
+    )
+
+
+def test_adaptive_epsilon_fused_sampler_trains(dataset):
+    """The traced-eps schedule through the in-kernel sampler: the eps
+    operand reaches the Pallas kernel traced (arm selection + logaddexp
+    handle any value in the 1.0 -> 0.1 schedule, including the eps = 1.0
+    first step), the loop stays finite and the policy improves."""
+    train_ds, test_ds = dataset
+    fopo = FOPOConfig(
+        num_items=2000, num_samples=64, top_k=32, retriever="exact",
+        fused=True, fused_sampler=True, sample_tile=16,
+    )
+    tc = TrainerConfig(
+        estimator="fopo", fopo=fopo, batch_size=16, learning_rate=3e-3,
+        num_steps=60, adaptive_eps=True, checkpoint_every=0, seed=0,
+    )
+    tr = FOPOTrainer(tc, train_ds)
+    assert tr.plan.fused_sampler and tr.plan.interpret
+    r0 = tr.evaluate(test_ds)
+    hist = tr.train(60)
+    assert np.all(np.isfinite(hist["loss"]))
+    assert tr.evaluate(test_ds) > r0

@@ -2,6 +2,8 @@
 paper's protocol at CPU-tractable size), method runners, timers."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -11,6 +13,8 @@ import numpy as np
 from repro.core import FOPOConfig
 from repro.data import SyntheticConfig, generate_sessions
 from repro.train import FOPOTrainer, TrainerConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 _DATA_CACHE: dict = {}
 
@@ -69,6 +73,18 @@ def timed_train(trainer: FOPOTrainer, steps: int) -> tuple[float, dict]:
     return time.perf_counter() - t0, hist
 
 
+def time_call(fn, *args, n=5) -> float:
+    """us/call after one warmup call (jit compile excluded), blocking on
+    the result — THE timer every suite shares."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
 # rows emitted by the currently running suite; benchmarks.run snapshots
 # and clears this around each suite to persist results/BENCH_<suite>.json
 EMITTED: list[dict] = []
@@ -77,3 +93,12 @@ EMITTED: list[dict] = []
 def emit(name: str, us_per_call: float, derived: str) -> None:
     EMITTED.append({"name": name, "us_per_call": us_per_call, "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def persist(name: str, rows: list[dict], wall_s: float) -> None:
+    """Write a suite's rows to results/BENCH_<name>.json (benchmarks.run
+    calls this for every suite; standalone suite mains call it too)."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": name, "wall_s": wall_s, "rows": rows}, f, indent=2)

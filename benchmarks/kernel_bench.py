@@ -4,29 +4,17 @@ from the roofline analysis (§Roofline); interpret mode is a correctness
 harness, not a performance proxy, so the jnp twin is what we time here."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_call as _time
 from benchmarks.roofline import snis_hbm_bytes
 from repro.kernels.snis_covgrad import snis_covgrad_fused, snis_covgrad_fused_ref
 from repro.kernels.snis_covgrad.ref import snis_covgrad_ref
 from repro.mips.exact import topk_exact
 from repro.mips.ivf import build_ivf, ivf_query
 from repro.mips.streaming import topk_streaming
-
-
-def _time(fn, *args, n=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6
 
 
 def run() -> None:

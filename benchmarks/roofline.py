@@ -67,6 +67,56 @@ def snis_gather_model(b: int, s: int, l: int, sample_tile: int,
     }
 
 
+def ivf_query_model(
+    b: int, l: int, p: int, *, c: int, n_probe: int, cap: int, k: int,
+    dtype_bytes: int = 4, hbm_bw: float = 819e9,
+) -> dict:
+    """HBM-traffic model of ONE training-time MIPS query batch, per
+    retriever route (see repro/kernels/ivf_topk docstring).
+
+    exact      — beta read once (P*L, amortised over the batch by the
+                 matmul) but the (B, P) score matrix is written and read
+                 back around lax.top_k;
+    streaming / pallas —
+                 same single beta pass, score matrix never exists
+                 (carried top-K), still O(P*L) per batch;
+    ivf (jnp)  — sublinear candidates, but `jnp.take` materialises the
+                 (B, n_probe*cap, L) gather tensor in HBM (write + read
+                 back by the einsum) ON TOP of the underlying list_embs
+                 row reads, and the (B, n_probe*cap) scores round-trip;
+    ivf_pallas — centroid matmul + each probed (cap_tile, L) list tile
+                 streamed HBM -> VMEM exactly once per (row, probe);
+                 neither the candidate tensor nor its score matrix
+                 touches HBM.
+
+    Per-row break-even: n_probe*cap*L vs P*L/B + 2P — the IVF routes
+    win when the probed candidate count is far under the catalog (the
+    whole point of C ~ sqrt(P) clustering).
+    """
+    topk_out = 2 * b * k  # scores + ids, all routes
+    exact = p * l + 2 * b * p + topk_out
+    streaming = p * l + topk_out
+    centroid_stage = c * l + 2 * b * c  # centroid reads + (B, C) roundtrip
+    cand = b * n_probe * cap
+    ivf_jnp = centroid_stage + 3 * cand * l + cand + 2 * cand + topk_out
+    ivf_pallas = centroid_stage + cand * (l + 1) + topk_out
+    return {
+        "b": b, "l": l, "p": p, "c": c, "n_probe": n_probe, "cap": cap,
+        "k": k,
+        "candidate_frac": n_probe * cap / p,
+        "exact_bytes": dtype_bytes * exact,
+        "streaming_bytes": dtype_bytes * streaming,
+        "pallas_bytes": dtype_bytes * streaming,  # same traffic shape
+        "ivf_jnp_bytes": dtype_bytes * ivf_jnp,
+        "ivf_pallas_bytes": dtype_bytes * ivf_pallas,
+        "ivf_pallas_vs_exact": exact / ivf_pallas,
+        "ivf_pallas_vs_streaming": streaming / ivf_pallas,
+        "ivf_pallas_vs_ivf_jnp": ivf_jnp / ivf_pallas,
+        "exact_step_s": dtype_bytes * exact / hbm_bw,
+        "ivf_pallas_step_s": dtype_bytes * ivf_pallas / hbm_bw,
+    }
+
+
 def dist_comms_model(
     b: int, s: int, k: int, l: int, p: int, n_model: int,
     *, dtype_bytes: int = 4, hbm_bw: float = 819e9, ici_bw: float = 50e9,

@@ -13,8 +13,6 @@ from the dry-run artifacts (results/dryrun_*.json); run
 """
 from __future__ import annotations
 
-import json
-import os
 import sys
 import time
 
@@ -24,6 +22,7 @@ from benchmarks import (
     fused_step,
     grad_quality,
     kernel_bench,
+    retrieval,
     roofline,
     rq0_fixed_embeddings,
     rq1_speedup,
@@ -42,18 +41,9 @@ SUITES = {
     "kernels": kernel_bench.run,
     "fused": fused_step.run,  # emits results/BENCH_fused_step.json
     "dist_step": dist_step.run,  # multi-device step (subprocess 4-dev mesh)
+    "retrieval": retrieval.run,  # MIPS probe routes incl. the IVF kernel
     "roofline": roofline.run,
 }
-
-
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
-
-
-def _persist(name: str, rows: list[dict], wall_s: float) -> None:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
-    with open(path, "w") as f:
-        json.dump({"suite": name, "wall_s": wall_s, "rows": rows}, f, indent=2)
 
 
 def main() -> None:
@@ -64,7 +54,7 @@ def main() -> None:
         t0 = time.time()
         SUITES[name]()
         wall = time.time() - t0
-        _persist(name, list(common.EMITTED), wall)
+        common.persist(name, list(common.EMITTED), wall)
         print(f"_suite_{name}_wall_s,{wall * 1e6:.0f},done")
 
 

@@ -1,0 +1,22 @@
+"""Backend-level execution-mode resolution, import-cycle free.
+
+`resolve_interpret` is THE interpret-mode rule for every Pallas kernel
+in the repo: an explicit setting wins; `None` selects compiled Pallas
+on TPU and interpret mode everywhere else. It used to live in
+`repro.core.plan` (which re-exports it unchanged), but the kernel
+`ops.py` wrappers also need it for their own `interpret=None` defaults
+— and `repro.core.plan` imports from `repro.kernels`, so a kernel
+module importing the plan back would cycle through the package
+`__init__`s. This leaf module depends on jax alone.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None, backend: str | None = None) -> bool:
+    """An explicit setting wins; None -> compiled Pallas on TPU,
+    interpret mode on every other backend."""
+    if interpret is not None:
+        return interpret
+    return (backend or jax.default_backend()) != "tpu"

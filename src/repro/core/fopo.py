@@ -2,7 +2,8 @@
 
 One training step =
   1. h = h_theta(x)                       (user tower)
-  2. top-K = retrieve(h)                  (MIPS: exact | streaming | IVF | sharded)
+  2. top-K = retrieve(h)                  (MIPS: exact | streaming | IVF |
+                                           IVF-Pallas | sharded | pallas)
   3. q = eps/P + (1-eps) softmax(top-K)   (mixture proposal)
   4. a_1..a_S ~ q                         (S draws per context)
   5. SNIS weights + covariance gradient   (O(S) — catalog-free)
@@ -50,7 +51,12 @@ class FOPOConfig:
     num_samples: int = 1000  # S
     top_k: int = 256  # K
     epsilon: float = 0.8
-    retriever: str = "streaming"  # exact | streaming | ivf | sharded | pallas
+    # exact | streaming | ivf | ivf_pallas | sharded | pallas.
+    # "ivf_pallas" is the kernel-grade IVF query (repro.kernels.ivf_topk):
+    # sublinear retrieval with the inverted-list gather streamed
+    # HBM -> VMEM in tiles; needs retriever_kwargs={"index": build_ivf(
+    # ..., cap_tile=...)} (or build_ivf_sharded under dist=).
+    retriever: str = "streaming"
     # fused=True runs the SNIS + covariance-gradient step through the
     # Pallas custom_vjp kernels (in-kernel beta gather — no (B, S, L)
     # tensor in HBM). fused_interpret=None auto-falls-back to interpret

@@ -42,6 +42,7 @@ from typing import TYPE_CHECKING, Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.backend import resolve_interpret
 from repro.kernels.snis_covgrad.ops import resolve_sample_tile
 
 if TYPE_CHECKING:
@@ -50,17 +51,16 @@ if TYPE_CHECKING:
     from repro.dist.fopo import DistConfig
     from repro.mips.exact import TopK
 
+__all__ = ["ExecutionPlan", "RETRIEVERS", "make_retriever", "resolve_interpret"]
+
 Retriever = Callable[[jnp.ndarray, jnp.ndarray], "TopK"]  # (h, beta) -> TopK
 
-RETRIEVERS = ("exact", "streaming", "ivf", "sharded", "pallas")
+RETRIEVERS = ("exact", "streaming", "ivf", "ivf_pallas", "sharded", "pallas")
 
-
-def resolve_interpret(fused_interpret: bool | None, backend: str | None = None) -> bool:
-    """THE interpret-mode rule: an explicit setting wins; None selects
-    compiled Pallas on TPU and interpret mode everywhere else."""
-    if fused_interpret is not None:
-        return fused_interpret
-    return (backend or jax.default_backend()) != "tpu"
+# retrievers whose query runs a Pallas kernel — the plan's resolved
+# interpret mode is injected into their construction (same rule as the
+# covgrad/sampler kernels: compiled on TPU, interpret elsewhere)
+_PALLAS_RETRIEVERS = ("pallas", "ivf_pallas")
 
 
 def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
@@ -77,22 +77,44 @@ def make_retriever(cfg: FOPOConfig, **kw) -> Retriever:
     if cfg.retriever == "pallas":
         from repro.kernels.mips_topk import ops as mips_ops
 
-        interpret = kw.get("interpret", True)
+        interpret = kw.get("interpret")  # None -> the ops backend rule
         return lambda h, beta: mips_ops.mips_topk(
             h, beta, cfg.top_k, interpret=interpret
         )
     if cfg.retriever == "ivf":
-        index = kw["index"]  # prebuilt IVFIndex (Assumption 1: beta fixed)
-        n_probe = kw.get("n_probe", 8)
-        from repro.mips.ivf import ivf_query
+        from repro.mips.ivf import DEFAULT_N_PROBE, ivf_query
 
+        index = kw["index"]  # prebuilt IVFIndex (Assumption 1: beta fixed)
+        n_probe = kw.get("n_probe", DEFAULT_N_PROBE)
         return lambda h, beta: ivf_query(index, h, cfg.top_k, n_probe=n_probe)
+    if cfg.retriever == "ivf_pallas":
+        from repro.kernels.ivf_topk import ops as ivf_ops
+
+        index, n_probe, cap_tile = _resolve_ivf_pallas_kwargs(kw)
+        interpret = kw.get("interpret")
+        return lambda h, beta: ivf_ops.ivf_topk(
+            h, index, cfg.top_k, n_probe=n_probe, cap_tile=cap_tile,
+            interpret=interpret,
+        )
     if cfg.retriever == "sharded":
         from repro.mips.sharded import make_sharded_topk_fn
 
         fn = make_sharded_topk_fn(kw["mesh"], cfg.top_k, kw.get("axis", "model"))
         return lambda h, beta: fn(h, beta)
     raise ValueError(f"unknown retriever {cfg.retriever!r}")
+
+
+def _resolve_ivf_pallas_kwargs(kw: dict):
+    """THE ivf_pallas kwarg resolution (single-device and dist routes
+    alike): tile-align the prebuilt index ONCE — Assumption 1 fixes it,
+    and leaving alignment to the kernel's in-trace pad fallback would
+    re-copy the whole list table every step — and pin the n_probe
+    default. Returns (aligned index, n_probe, cap_tile)."""
+    from repro.kernels.ivf_topk import ops as ivf_ops
+    from repro.mips.ivf import DEFAULT_N_PROBE
+
+    index, cap_tile = ivf_ops.tile_align_index(kw["index"], kw.get("cap_tile"))
+    return index, kw.get("n_probe", DEFAULT_N_PROBE), cap_tile
 
 
 def _validate(cfg: FOPOConfig, *, injected_retriever: bool, retriever_kwargs: dict) -> None:
@@ -117,19 +139,57 @@ def _validate(cfg: FOPOConfig, *, injected_retriever: bool, retriever_kwargs: di
                 f"FOPOConfig.dist must be a DistConfig (or None), got "
                 f"{type(cfg.dist).__name__}"
             )
+    if not injected_retriever and cfg.retriever not in RETRIEVERS:
+        # typo guard fires under dist too — a misspelt retriever must
+        # never silently fall back to the sharded exact scan
+        raise ValueError(
+            f"unknown retriever {cfg.retriever!r} (one of {RETRIEVERS})"
+        )
+    if not injected_retriever and cfg.dist is not None and cfg.retriever == "ivf":
+        raise ValueError(
+            'retriever="ivf" has no dist route (the jnp query would '
+            "materialise the candidate tensor per shard); use "
+            'retriever="ivf_pallas" with build_ivf_sharded, or drop the '
+            "knob to take the sharded top-K merge"
+        )
     if not injected_retriever and cfg.dist is None:
-        if cfg.retriever not in RETRIEVERS:
+        if cfg.retriever in ("ivf", "ivf_pallas") and "index" not in retriever_kwargs:
             raise ValueError(
-                f"unknown retriever {cfg.retriever!r} (one of {RETRIEVERS})"
-            )
-        if cfg.retriever == "ivf" and "index" not in retriever_kwargs:
-            raise ValueError(
-                'retriever="ivf" needs a prebuilt index: pass '
+                f'retriever="{cfg.retriever}" needs a prebuilt index: pass '
                 "retriever_kwargs={'index': build_ivf(...)}"
             )
+        if cfg.retriever == "ivf_pallas":
+            from repro.mips.ivf import IVFIndex
+
+            if not isinstance(retriever_kwargs["index"], IVFIndex):
+                raise ValueError(
+                    'retriever="ivf_pallas" without dist= takes a single '
+                    "IVFIndex (got "
+                    f"{type(retriever_kwargs['index']).__name__}); under "
+                    "dist= pass a ShardedIVFIndex from build_ivf_sharded"
+                )
         if cfg.retriever == "sharded" and "mesh" not in retriever_kwargs:
             raise ValueError(
                 'retriever="sharded" needs retriever_kwargs={"mesh": ...}'
+            )
+    if not injected_retriever and cfg.dist is not None and cfg.retriever == "ivf_pallas":
+        # the one retriever the dist path resolves itself (every other
+        # name falls back to the sharded exact top-K merge): each model
+        # shard probes its LOCAL inverted lists, so the index must be
+        # the per-shard stacked build
+        from repro.mips.ivf import ShardedIVFIndex
+
+        index = retriever_kwargs.get("index")
+        if not isinstance(index, ShardedIVFIndex):
+            raise ValueError(
+                'retriever="ivf_pallas" under dist= needs retriever_kwargs='
+                "{'index': build_ivf_sharded(...)} with n_shards == the "
+                f"mesh model-axis size (got {type(index).__name__})"
+            )
+        if index.n_shards != cfg.dist.n_model:
+            raise ValueError(
+                f"ShardedIVFIndex has {index.n_shards} shards but the mesh "
+                f"model axis is {cfg.dist.n_model}"
             )
 
 
@@ -143,8 +203,13 @@ class ExecutionPlan:
                                                   interpret-mode kernels
       cfg.sample_tile      -> plan.sample_tile    clamped kernel tiling
       cfg.retriever        -> plan.retriever      built (h, beta)->TopK
-                                                  (None: dist sharded
-                                                  top-K owns retrieval)
+                                                  (None under dist: the
+                                                  sharded top-K merge
+                                                  owns retrieval —
+                                                  except "ivf_pallas",
+                                                  which probes local
+                                                  inverted lists per
+                                                  model shard)
       cfg.fused_sampler    -> plan.fused_sampler  Pallas in-kernel
                                                   sampler vs jax.random
                                                   MixtureProposal
@@ -180,7 +245,9 @@ class ExecutionPlan:
         towers) and skips retriever construction/validation; otherwise
         the plan builds the configured one (``retriever_kwargs`` feeds
         it, e.g. the IVF index). In dist mode with no injection the
-        sharded top-K merge owns retrieval (plan.retriever is None).
+        sharded top-K merge owns retrieval (plan.retriever is None) —
+        unless ``retriever="ivf_pallas"``, whose per-shard IVF probe
+        replaces the exact merge (needs a ShardedIVFIndex).
         """
         kw = retriever_kwargs or {}
         backend = backend or jax.default_backend()
@@ -196,8 +263,25 @@ class ExecutionPlan:
             cfg = dataclasses.replace(cfg, sample_tile=tile)
         if uses_kernels and cfg.fused_interpret is None:
             cfg = dataclasses.replace(cfg, fused_interpret=interpret)
+        if retriever is None and cfg.retriever in _PALLAS_RETRIEVERS:
+            # the retriever kernels follow the SAME resolved interpret
+            # mode as the covgrad/sampler kernels (an explicit kwarg
+            # still wins) — this is what lets them compile on TPU
+            kw = dict(kw)
+            kw.setdefault("interpret", interpret)
         if retriever is None and cfg.dist is None:
             retriever = make_retriever(cfg, **kw)
+        elif retriever is None and cfg.retriever == "ivf_pallas":
+            # dist x ivf_pallas: retrieval joins the plan as a per-shard
+            # IVF probe + K-merge instead of the sharded exact top-K
+            from repro.dist.fopo import dist_ivf_topk
+
+            index, n_probe, cap_tile = _resolve_ivf_pallas_kwargs(kw)
+            r_interp, dist_cfg, top_k = kw["interpret"], cfg.dist, cfg.top_k
+            retriever = lambda h, beta: dist_ivf_topk(  # noqa: E731
+                h, index, top_k, dist_cfg, n_probe=n_probe,
+                cap_tile=cap_tile, interpret=r_interp,
+            )
         return cls(
             cfg=cfg,
             backend=backend,

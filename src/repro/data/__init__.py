@@ -8,6 +8,7 @@ from repro.data.loader import BatchLoader, LoaderState
 from repro.data.synthetic import (
     SessionDataset,
     SyntheticConfig,
+    clustered_catalog,
     generate_sessions,
     goodreads_like,
     twitch_like,
@@ -16,6 +17,7 @@ from repro.data.synthetic import (
 __all__ = [
     "SessionDataset",
     "SyntheticConfig",
+    "clustered_catalog",
     "generate_sessions",
     "twitch_like",
     "goodreads_like",

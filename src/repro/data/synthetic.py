@@ -150,3 +150,46 @@ def goodreads_like(scale: float = 1.0, embed_dim: int = 100, seed: int = 0) -> S
         embed_dim=embed_dim,
         seed=seed,
     )
+
+
+def clustered_catalog(
+    num_items: int,
+    embed_dim: int,
+    num_clusters: int,
+    num_queries: int,
+    *,
+    std: float = 0.05,
+    query_blend: float = 0.5,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(items [P, L], queries [B, L]): a catalog drawn from tight
+    Gaussian clusters — the structured-embedding regime IVF-style
+    retrievers exploit (real recommendation catalogs cluster; isotropic
+    Gaussians are the adversarial case). One generator shared by the
+    IVF recall tests and the retrieval benchmark gate, so their notion
+    of "clustered" cannot drift.
+
+    Each query is a ``query_blend`` mixture of TWO random cluster
+    centers, so its top-K straddles both clusters and recall genuinely
+    *varies* with n_probe (~0.5 at n_probe=1, ~1.0 from 2) — a
+    single-center query would sit entirely inside one cluster and
+    saturate every recall gate at n_probe=1, leaving multi-probe
+    regressions (merge bugs, probe-ranking bugs) undetectable. Set
+    query_blend=0 for the easy single-cluster regime."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((num_clusters, embed_dim))
+    # equal center norms: otherwise the larger-norm cluster of a blended
+    # pair wins the whole top-K by ~|c_a|^2 - |c_b|^2 (chi^2 spread) and
+    # the straddle — the thing that makes recall vary with n_probe —
+    # never happens
+    centers *= np.sqrt(embed_dim) / np.linalg.norm(centers, axis=1, keepdims=True)
+    assign = rng.integers(0, num_clusters, size=num_items)
+    items = centers[assign] + std * rng.standard_normal((num_items, embed_dim))
+    qa = rng.integers(0, num_clusters, size=num_queries)
+    qb = rng.integers(0, num_clusters, size=num_queries)
+    queries = (
+        (1.0 - query_blend) * centers[qa]
+        + query_blend * centers[qb]
+        + std * rng.standard_normal((num_queries, embed_dim))
+    )
+    return items.astype(np.float32), queries.astype(np.float32)

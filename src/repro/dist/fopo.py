@@ -74,6 +74,7 @@ from repro.kernels.snis_covgrad.ops import (
     snis_scores_fused,
 )
 from repro.mips.exact import TopK
+from repro.mips.ivf import DEFAULT_N_PROBE
 from repro.mips.sharded import sharded_topk
 
 
@@ -333,6 +334,57 @@ def dist_fused_covariance_loss(
 # ---------------------------------------------------------------------------
 # the full dist Algorithm-1 loss — retrieval + sampling + fused step
 # ---------------------------------------------------------------------------
+
+def dist_ivf_topk(
+    h: jnp.ndarray,  # [B, L] user embeddings — batch-sharded over `data`
+    index,  # ShardedIVFIndex: one local IVF per model shard, global ids
+    k: int,
+    dist: DistConfig,
+    *,
+    n_probe: int = DEFAULT_N_PROBE,
+    cap_tile: int | None = None,
+    interpret: bool | None = None,
+) -> TopK:
+    """Sublinear proposal retrieval on the mesh: each `model` shard runs
+    the tiled Pallas IVF query (`repro.kernels.ivf_topk`) over its OWN
+    inverted lists — probing only local clusters, O(C_loc*L +
+    n_probe*cap*L) per shard instead of the sharded exact top-K's full
+    local scan O(P/n * L) — then the [n, B, K] local candidates merge
+    along `model` exactly like `sharded_topk` (ids are already global:
+    the slab offset is baked into the lists at build time, see
+    `build_ivf_sharded`). Downstream id routing / psum machinery is
+    untouched: `merge_topk_along_axis` is the SAME K-merge the exact
+    route ends in (one home for the dead-slot convention — short local
+    lists back-fill id -1 / NEG_INF and lose the merge)."""
+    from repro.kernels.ivf_topk import ivf_topk
+    from repro.mips.ivf import ShardedIVFIndex
+    from repro.mips.sharded import merge_topk_along_axis
+
+    def local(q, cent, lists, embs):
+        # the shard_map block is the [1, ...] leading-axis slice — view
+        # it as this device's local IVFIndex (global ids baked in)
+        local_index = ShardedIVFIndex(cent, lists, embs, index.num_items).shard(0)
+        loc = ivf_topk(
+            q, local_index, k,
+            n_probe=n_probe, cap_tile=cap_tile, interpret=interpret,
+        )
+        return merge_topk_along_axis(loc.scores, loc.indices, k, dist.model_axis)
+
+    return shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(
+            P(dist.data_axis, None),
+            P(dist.model_axis, None, None),
+            P(dist.model_axis, None, None),
+            P(dist.model_axis, None, None, None),
+        ),
+        out_specs=TopK(
+            scores=P(dist.data_axis, None), indices=P(dist.data_axis, None)
+        ),
+        check_vma=False,
+    )(h, index.centroids, index.lists, index.list_embs)
+
 
 def dist_sharded_topk(
     h: jnp.ndarray,  # [B, L] user embeddings (proposal side)

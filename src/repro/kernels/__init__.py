@@ -11,6 +11,7 @@ from repro.kernels.fused_sampler import (
     fused_mixture_sample,
     fused_mixture_sample_ref,
 )
+from repro.kernels.ivf_topk import ivf_topk, ivf_topk_ref
 from repro.kernels.mips_topk import mips_topk, mips_topk_ref
 from repro.kernels.snis_covgrad import (
     snis_covgrad_bwd,
@@ -22,6 +23,8 @@ from repro.kernels.snis_covgrad import (
 __all__ = [
     "mips_topk",
     "mips_topk_ref",
+    "ivf_topk",
+    "ivf_topk_ref",
     "embedding_bag",
     "embedding_bag_ref",
     "snis_covgrad_fused",

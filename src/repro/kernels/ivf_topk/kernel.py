@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: tiled IVF (inverted-file) top-K MIPS query.
+
+The jnp IVF query (`repro.mips.ivf.ivf_query`) is sublinear in FLOPs
+but not in HBM traffic: `jnp.take(list_embs, probe)` materialises the
+[B, n_probe*cap, L] candidate-embedding tensor in HBM (written by the
+gather, read back by the scoring einsum) on top of the underlying row
+reads, and the [B, n_probe*cap] score matrix round-trips too. At paper
+shapes that gather tensor alone dwarfs the per-step traffic the fused
+covgrad kernels eliminated.
+
+This kernel is the PR-2 gather-tile treatment applied to retrieval:
+
+  grid (B, n_probe, cap/CT), probe ids as a **scalar-prefetch** operand
+  (SMEM) so the inverted-list BlockSpec index_maps are data-dependent —
+  step (i, jp, jc) DMAs the (CT, L) embedding tile and (1, CT) id tile
+  of cluster probe[i, jp] straight HBM -> VMEM (Pallas double-buffers
+  the pipeline: the next tile's DMA is in flight while this tile's
+  scores contract), scores the tile as ONE (1, L) x (L, CT) MXU
+  contraction against the resident query row, and folds it into a
+  running masked top-K carried in the output block (the same online
+  merge as `repro.kernels.mips_topk`). Neither the [B, n_probe*cap, L]
+  candidate tensor nor the [B, n_probe*cap] score matrix ever exists in
+  HBM; each probed tile's bytes move exactly once.
+
+VMEM per step: q (1, L) + emb tile (CT, L) + id tile (1, CT) + carry
+(1, K) x2 + the (1, K+CT) merge — with CT=256, L=128, K=256 (fp32)
+~160KB, far inside VMEM with double buffering. CT is a multiple of 8
+and the merge runs on the minor axis, so Mosaic's native top_k/sort
+lowering applies; interpret mode executes the identical body on CPU.
+
+Grid semantics: batch axis parallel; the probe and cap-tile axes are a
+sequential reduction into the carry ("arbitrary").
+
+Centroid scoring + per-row top-n_probe happen *before* this kernel (a
+(B, L) x (L, C) matmul over the O(sqrt P)-sized centroid table — see
+ops.py): the probe ids must exist up front to drive the scalar-prefetch
+index_maps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.constants import NEG_INF
+from repro.kernels._compat import CompilerParams
+
+
+def _ivf_topk_kernel(
+    probe_ref,  # [B, n_probe] int32 scalar-prefetch (SMEM)
+    q_ref,  # (1, L) query row b (resident across probe/cap steps)
+    ids_tile_ref,  # (1, CT) inverted-list ids of cluster probe[b, jp]
+    emb_tile_ref,  # (1, CT, L) that cluster's embedding tile
+    scores_ref,  # (1, K) running top-K scores (output, accumulated)
+    out_ids_ref,  # (1, K) running top-K ids (output, accumulated)
+    *,
+    k: int,
+):
+    jp = pl.program_id(1)
+    jc = pl.program_id(2)
+
+    @pl.when((jp == 0) & (jc == 0))
+    def _init():
+        scores_ref[...] = jnp.full_like(scores_ref, NEG_INF)
+        out_ids_ref[...] = jnp.full_like(out_ids_ref, -1)
+
+    tile = emb_tile_ref[0]  # (CT, L)
+    # all CT candidate scores as one contraction against the query row
+    s = jax.lax.dot_general(
+        q_ref[...], tile, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, CT)
+    ids = ids_tile_ref[...]  # (1, CT)
+    s = jnp.where(ids >= 0, s, NEG_INF)  # list padding is dead
+
+    cat_s = jnp.concatenate([scores_ref[...], s], axis=-1)  # (1, K+CT)
+    cat_i = jnp.concatenate([out_ids_ref[...], ids], axis=-1)
+    new_s, pos = jax.lax.top_k(cat_s, k)
+    scores_ref[...] = new_s
+    out_ids_ref[...] = jnp.take_along_axis(cat_i, pos, axis=-1)
+
+
+def ivf_topk_pallas(
+    queries: jnp.ndarray,  # [B, L] float32
+    probe: jnp.ndarray,  # [B, n_probe] int32 cluster ids (pre-selected)
+    lists: jnp.ndarray,  # [C, capp] int32 item ids, -1 padded; capp % CT == 0
+    list_embs: jnp.ndarray,  # [C, capp, L] float32 (0 on padded slots)
+    *,
+    k: int,
+    cap_tile: int,
+    interpret: bool = False,
+):
+    """Returns (scores [B, K], ids [B, K]) — the masked top-K over the
+    probed clusters' inverted lists. Rows short of k candidates
+    back-fill score NEG_INF / id -1 (the TopK masking convention)."""
+    b, l = queries.shape
+    n_probe = probe.shape[1]
+    capp = lists.shape[1]
+    if capp % cap_tile:
+        raise ValueError(
+            f"cap={capp} must be padded to a multiple of CT={cap_tile}"
+        )
+    grid = (b, n_probe, capp // cap_tile)
+    kernel = functools.partial(_ivf_topk_kernel, k=k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i, jp, jc, pr: (i, 0)),  # query row
+            # the data-dependent fetch: which cluster's list/embedding
+            # tile to DMA comes from the prefetched probe ids
+            pl.BlockSpec(
+                (1, cap_tile), lambda i, jp, jc, pr: (pr[i, jp], jc)
+            ),
+            pl.BlockSpec(
+                (1, cap_tile, l), lambda i, jp, jc, pr: (pr[i, jp], jc, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, jp, jc, pr: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, jp, jc, pr: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(probe, queries, lists, list_embs)

@@ -1,0 +1,119 @@
+"""jit'd public wrapper for the tiled IVF query kernel.
+
+`ivf_topk(queries, index, k)` is the kernel-grade twin of
+`repro.mips.ivf.ivf_query`: same `IVFIndex`, same TopK result, same
+candidate set (identical probe selection), but the inverted-list
+gather streams (CT, L) tiles HBM -> VMEM instead of materialising the
+[B, n_probe*cap, L] candidate tensor. Stage 1 (centroid scoring + per-
+row top-n_probe) runs here as a plain (B, L) x (L, C) matmul — it must
+precede the kernel because the probe ids drive the scalar-prefetch
+index_maps — and stage 2 is `ivf_topk_pallas`.
+
+Handles n_probe clamping (<= C), padding the list capacity up to the
+cap tile (a no-op when the index was built with ``cap_tile=``), and
+interpret-mode resolution (None -> the backend rule shared with every
+other kernel wrapper; the ExecutionPlan passes its resolved mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.backend import resolve_interpret
+from repro.kernels.ivf_topk.kernel import ivf_topk_pallas
+from repro.mips.exact import TopK
+from repro.mips.ivf import (
+    DEFAULT_CAP_TILE,
+    DEFAULT_N_PROBE,
+    IVFIndex,
+    resolve_cap_tile,
+)
+
+
+def tile_align_index(index, cap_tile: int | None):
+    """Resolve the cap tile against an index and pad its padded-list
+    axis up to a tile multiple ONCE. Returns (aligned index, CT).
+
+    Accepts an `IVFIndex` or a `ShardedIVFIndex` (the list axis is the
+    last of `lists`, second-to-last of `list_embs`). Call this at
+    retriever/plan construction: the index is static (Assumption 1), so
+    leaving a misaligned layout to `_ivf_topk_impl`'s in-trace pad
+    fallback would copy the whole [C, cap, L] table in HBM on every
+    training step — the exact cost class this kernel exists to remove.
+    `build_ivf(..., cap_tile=)` emits the aligned layout up front and
+    makes this a no-op."""
+    capp = index.lists.shape[-1]
+    ct = resolve_cap_tile(cap_tile, capp)
+    pad = (-capp) % ct
+    if pad:
+        wl = [(0, 0)] * index.lists.ndim
+        wl[-1] = (0, pad)
+        we = [(0, 0)] * index.list_embs.ndim
+        we[-2] = (0, pad)
+        index = index._replace(
+            lists=jnp.pad(index.lists, wl, constant_values=-1),
+            list_embs=jnp.pad(index.list_embs, we),
+        )
+    return index, ct
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_probe", "cap_tile", "interpret")
+)
+def _ivf_topk_impl(
+    queries, centroids, lists, list_embs, *, k, n_probe, cap_tile, interpret
+):
+    # stage 1: centroid scores on the MXU + per-row probe selection
+    q = queries.astype(jnp.float32)
+    c_scores = q @ centroids.astype(jnp.float32).T  # [B, C]
+    _, probe = jax.lax.top_k(c_scores, n_probe)  # [B, n_probe]
+
+    # tile-align fallback for ad-hoc callers (no-op for cap_tile-built
+    # or tile_align_index'ed layouts — hot paths MUST arrive aligned,
+    # or this pad re-copies the whole table inside the traced step)
+    pad = (-lists.shape[1]) % cap_tile
+    if pad:
+        lists = jnp.pad(lists, ((0, 0), (0, pad)), constant_values=-1)
+        list_embs = jnp.pad(list_embs, ((0, 0), (0, pad), (0, 0)))
+
+    scores, ids = ivf_topk_pallas(
+        q,
+        probe.astype(jnp.int32),
+        lists,
+        list_embs.astype(jnp.float32),
+        k=k,
+        cap_tile=cap_tile,
+        interpret=interpret,
+    )
+    return scores, ids
+
+
+def ivf_topk(
+    queries: jnp.ndarray,  # [B, L]
+    index: IVFIndex,
+    k: int,
+    *,
+    n_probe: int = DEFAULT_N_PROBE,
+    cap_tile: int | None = None,
+    interpret: bool | None = None,
+) -> TopK:
+    """queries [B, L] -> approximate TopK([B, K]) over `index`, scored
+    by the tiled Pallas kernel. Same candidate set as
+    `ivf_query(index, queries, k, n_probe)`."""
+    interpret = resolve_interpret(interpret)
+    c, capp = index.lists.shape
+    n_probe = min(n_probe, c)
+    ct = resolve_cap_tile(cap_tile, capp)
+    scores, ids = _ivf_topk_impl(
+        queries,
+        index.centroids,
+        index.lists,
+        index.list_embs,
+        k=k,
+        n_probe=n_probe,
+        cap_tile=ct,
+        interpret=interpret,
+    )
+    return TopK(scores=scores, indices=ids)

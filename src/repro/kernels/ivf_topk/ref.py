@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the tiled IVF query kernel.
+
+The oracle IS `repro.mips.ivf.ivf_query`: both select the same
+n_probe clusters from the same centroid scores and rank the same
+candidate multiset, so on distinct scores the kernel must reproduce it
+element-for-element — one implementation of the math, no twin to
+drift (the same single-source discipline as the fused sampler's ref).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.mips.exact import TopK
+from repro.mips.ivf import DEFAULT_N_PROBE, IVFIndex, ivf_query
+
+
+def ivf_topk_ref(
+    queries: jnp.ndarray, index: IVFIndex, k: int, *, n_probe: int = DEFAULT_N_PROBE
+) -> TopK:
+    return ivf_query(index, queries, k, n_probe=n_probe)

@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.backend import resolve_interpret
 from repro.kernels.mips_topk.kernel import mips_topk_pallas
 from repro.mips.exact import TopK
 
@@ -34,8 +35,11 @@ def mips_topk(
     *,
     tile_batch: int = 128,
     block_items: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> TopK:
+    # None -> backend rule (compiled on TPU, interpret elsewhere); the
+    # ExecutionPlan passes its resolved mode explicitly
+    interpret = resolve_interpret(interpret)
     b = queries.shape[0]
     p = items.shape[0]
     tb = min(tile_batch, max(8, 1 << (b - 1).bit_length()))

@@ -3,20 +3,36 @@
 All retrievers share the TopK(scores, indices) result type so the FOPO
 proposal layer is retriever-agnostic.
 """
-from repro.mips.exact import TopK, topk_exact
-from repro.mips.ivf import IVFIndex, build_ivf, ivf_query, kmeans
-from repro.mips.sharded import make_sharded_topk_fn, sharded_gather_rows, sharded_topk
+from repro.mips.exact import TopK, recall_at_k, topk_exact
+from repro.mips.ivf import (
+    IVFIndex,
+    ShardedIVFIndex,
+    build_ivf,
+    build_ivf_sharded,
+    ivf_query,
+    kmeans,
+)
+from repro.mips.sharded import (
+    make_sharded_topk_fn,
+    merge_topk_along_axis,
+    sharded_gather_rows,
+    sharded_topk,
+)
 from repro.mips.streaming import topk_streaming
 
 __all__ = [
     "TopK",
+    "recall_at_k",
     "topk_exact",
     "topk_streaming",
     "IVFIndex",
+    "ShardedIVFIndex",
     "build_ivf",
+    "build_ivf_sharded",
     "ivf_query",
     "kmeans",
     "sharded_topk",
+    "merge_topk_along_axis",
     "make_sharded_topk_fn",
     "sharded_gather_rows",
 ]

@@ -26,3 +26,19 @@ def topk_exact(queries: jnp.ndarray, items: jnp.ndarray, k: int) -> TopK:
 
 def topk_scores_only(queries: jnp.ndarray, items: jnp.ndarray, k: int) -> jnp.ndarray:
     return topk_exact(queries, items, k).scores
+
+
+def recall_at_k(approx: TopK, exact: TopK) -> float:
+    """Host-side metric: mean per-row fraction of the exact top-K ids
+    the approximate retriever recovered (-1 back-fill never matches).
+    THE recall definition shared by the test oracles and the retrieval
+    benchmark gate — one implementation so they cannot drift."""
+    import numpy as np
+
+    k = exact.indices.shape[-1]
+    a = np.asarray(approx.indices)
+    e = np.asarray(exact.indices)
+    return float(np.mean([
+        len(set(a[i].tolist()) & set(e[i].tolist())) / k
+        for i in range(e.shape[0])
+    ]))

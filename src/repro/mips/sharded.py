@@ -25,6 +25,30 @@ from repro.mips.exact import TopK
 from repro.mips.streaming import topk_streaming
 
 
+def merge_topk_along_axis(
+    scores: jnp.ndarray,  # [B, K'] local candidate scores
+    gids: jnp.ndarray,  # [B, K'] GLOBAL candidate ids, -1 marks dead slots
+    k: int,
+    axis: str,
+) -> TopK:
+    """Call INSIDE shard_map: all-gather each shard's [B, K'] candidates
+    along `axis` and reduce to the replicated global TopK([B, K]). THE
+    one K-merge — the exact streaming route and the IVF probe route
+    both end here, so the dead-slot convention (id -1 scores NEG_INF,
+    back-filled when candidates run short) lives in one place."""
+    from repro.constants import NEG_INF
+
+    scores = jnp.where(gids >= 0, scores, NEG_INF)
+    all_scores = jax.lax.all_gather(scores, axis)  # [n, B, K']
+    all_ids = jax.lax.all_gather(gids, axis)
+    n, b, local_k = all_scores.shape
+    cat_s = jnp.transpose(all_scores, (1, 0, 2)).reshape(b, n * local_k)
+    cat_i = jnp.transpose(all_ids, (1, 0, 2)).reshape(b, n * local_k)
+    vals, pos = jax.lax.top_k(cat_s, k)
+    idx = jnp.take_along_axis(cat_i, pos, axis=-1)
+    return TopK(scores=vals, indices=idx)
+
+
 def sharded_topk(
     queries: jnp.ndarray,  # [B, L] replicated over `axis`
     items_shard: jnp.ndarray,  # [P/n, L] — local rows (inside shard_map)
@@ -55,21 +79,10 @@ def sharded_topk(
     gids = jnp.where(
         local.indices >= 0, local.indices + shard_id * rows, -1
     ).astype(jnp.int32)
-    local_scores = local.scores
     if num_valid is not None:
-        from repro.constants import NEG_INF
-
-        ok = (gids >= 0) & (gids < num_valid)
-        local_scores = jnp.where(ok, local_scores, NEG_INF)
-        gids = jnp.where(ok, gids, -1)
-    all_scores = jax.lax.all_gather(local_scores, axis)  # [n, B, K']
-    all_ids = jax.lax.all_gather(gids, axis)  # [n, B, K']
-    b = queries.shape[0]
-    cat_s = jnp.transpose(all_scores, (1, 0, 2)).reshape(b, n * local_k)
-    cat_i = jnp.transpose(all_ids, (1, 0, 2)).reshape(b, n * local_k)
-    vals, pos = jax.lax.top_k(cat_s, k)
-    idx = jnp.take_along_axis(cat_i, pos, axis=-1)
-    return TopK(scores=vals, indices=idx)
+        # demote zero-pad rows (ids >= num_valid) to dead slots pre-merge
+        gids = jnp.where(gids < num_valid, gids, -1)
+    return merge_topk_along_axis(local.scores, gids, k, axis)
 
 
 def make_sharded_topk_fn(mesh, k: int, axis: str = "model", block_items: int = 4096):

@@ -52,6 +52,53 @@ def test_ivf_recall_increases_with_probes():
     assert r8 > 0.5
 
 
+def test_kmeans_clamps_excess_clusters():
+    """num_clusters > P used to crash inside jax.random.choice
+    (replace=False past the population); now it warns and clamps."""
+    pts = jax.random.normal(jax.random.PRNGKey(0), (12, 4))
+    with pytest.warns(UserWarning, match="clamping"):
+        centroids, assign = kmeans(jax.random.PRNGKey(1), pts, 50, iters=2)
+    assert centroids.shape == (12, 4)
+    assert (np.asarray(assign) < 12).all()
+    with pytest.warns(UserWarning, match="clamping"):
+        index = build_ivf(jax.random.PRNGKey(2), pts, num_clusters=50)
+    ids = np.asarray(index.lists)
+    assert sorted(ids[ids >= 0].tolist()) == list(range(12))
+
+
+def test_build_ivf_cap_overflow_warns_not_misbuckets():
+    """An explicit cap smaller than the largest cluster is clamped UP
+    with a warning — never silently dropping items from the list."""
+    items = jax.random.normal(jax.random.PRNGKey(0), (200, 8))
+    with pytest.warns(UserWarning, match="clamping cap"):
+        index = build_ivf(jax.random.PRNGKey(1), items, num_clusters=4, cap=2)
+    ids = np.asarray(index.lists)
+    assert sorted(ids[ids >= 0].tolist()) == list(range(200))
+
+
+def test_build_ivf_cap_tile_alignment():
+    items = jax.random.normal(jax.random.PRNGKey(0), (300, 8))
+    index = build_ivf(jax.random.PRNGKey(1), items, num_clusters=8, cap_tile=48)
+    assert index.lists.shape[1] % 48 == 0
+    assert index.list_embs.shape[:2] == index.lists.shape
+
+
+def test_kmeanspp_balances_clustered_catalog():
+    """On a tightly clustered catalog, D^2 seeding must not let one
+    centroid snowball the unclaimed mass (the random-init failure mode
+    that blew the padded cap — and every probe's cost — up ~16x)."""
+    c_true, per, l = 32, 32, 8
+    kc, kn = jax.random.split(jax.random.PRNGKey(0))
+    centers = jax.random.normal(kc, (c_true, l))
+    items = (
+        jnp.repeat(centers, per, axis=0)
+        + 0.05 * jax.random.normal(kn, (c_true * per, l))
+    )
+    _, assign = kmeans(jax.random.PRNGKey(1), items, c_true, iters=6)
+    counts = np.bincount(np.asarray(assign), minlength=c_true)
+    assert counts.max() <= 4 * per, counts.max()
+
+
 def test_ivf_index_covers_all_items():
     items = jax.random.normal(jax.random.PRNGKey(0), (777, 8))
     index = build_ivf(jax.random.PRNGKey(1), items, num_clusters=16)

@@ -89,6 +89,7 @@ def test_injected_retriever_passes_through():
         (dict(num_items=10, epsilon=2), "epsilon"),  # int bypass regression
         (dict(num_items=10, retriever="nope"), "unknown retriever"),
         (dict(num_items=10, retriever="ivf"), "index"),
+        (dict(num_items=10, retriever="ivf_pallas"), "index"),
         (dict(num_items=10, retriever="sharded"), "mesh"),
     ],
 )

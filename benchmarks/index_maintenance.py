@@ -1,0 +1,234 @@
+"""Index-maintenance suite: staleness vs recall under embedding drift.
+
+The paper's training loop holds only if the MIPS index stays usable
+while beta drifts. This suite measures, at the retrieval suite's paper
+shape (P = 131072, the catalog whose full IVF rebuild costs ~30 s):
+
+  * us/call of the jitted incremental ops (`repro.mips.refresh`):
+    mini-batch k-means refresh, delta-append, compaction — and the
+    AMORTIZED per-maintenance-cycle cost (refresh + append +
+    compact / compact_every) vs the stop-the-world `build_ivf` rebuild;
+  * a drift sweep: stages of catalog churn (re-embedded row subsets),
+    each followed by the incremental maintenance cycle, with recall@K
+    against the exact oracle on the CURRENT embeddings measured with
+    maintenance ON vs OFF (the stale build-time index);
+  * the `roofline.ivf_refresh_model` analytic rebuild-vs-amortized
+    ratio at the measured shape.
+
+The ``refresh_accept`` row is the PR acceptance gate: REFRESH_OK=1 iff
+the measured amortized cycle is >= 10x cheaper than the full rebuild
+AND maintained recall@K holds >= 0.95 across the drift sweep.
+
+    PYTHONPATH=src python -m benchmarks.index_maintenance           # full
+    PYTHONPATH=src python -m benchmarks.index_maintenance --smoke   # CI
+
+``--smoke`` runs the same pipeline at a tiny shape and hard-asserts
+refresh-vs-rebuild recall parity plus the zero-staleness property
+(delta-appended rows retrievable immediately). The full run persists
+results/BENCH_index.json.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call as _time
+from benchmarks.roofline import ivf_refresh_model
+from repro.data import clustered_catalog
+from repro.kernels.ivf_topk import ivf_topk
+from repro.mips.exact import recall_at_k, topk_exact
+from repro.mips.ivf import build_ivf
+from repro.mips.refresh import (
+    build_refresh_state,
+    compact,
+    delta_append,
+    refresh_query,
+    refresh_step,
+)
+
+
+def _churn(key, items, centers_key, frac: float, l: int):
+    """Re-embed a random `frac` of the rows onto fresh cluster centers —
+    the catalog-churn regime (new/updated items) the delta path serves.
+    Returns (new items, churned ids, their new embeddings)."""
+    p = items.shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    m = int(p * frac)
+    ids = jax.random.choice(k1, p, (m,), replace=False).astype(jnp.int32)
+    # fresh rows from the same clustered family, new center draw
+    centers = jax.random.normal(centers_key, (32, l))
+    centers = centers * jnp.sqrt(l) / jnp.linalg.norm(
+        centers, axis=1, keepdims=True
+    )
+    which = jax.random.randint(k2, (m,), 0, centers.shape[0])
+    new = centers[which] + 0.05 * jax.random.normal(k3, (m, l))
+    return items.at[ids].set(new), ids, new
+
+
+def run(smoke: bool = False) -> None:
+    if smoke:
+        p, l, c_true, c, b, k = 4096, 32, 64, 64, 8, 32
+        cap, cap_tile, iters, n_probe = 256, 32, 4, 4
+        minibatch, delta_cap, compact_every = 512, 64, 8
+        stages, frac = 3, 0.04
+    else:
+        p, l, c_true, c, b, k = 131_072, 64, 512, 512, 16, 64
+        cap, cap_tile, iters, n_probe = 1024, 256, 6, 4
+        minibatch, delta_cap, compact_every = 4096, 64, 8
+        stages, frac = 6, 0.05
+
+    items, queries = map(jnp.asarray, clustered_catalog(p, l, c_true, b))
+
+    # -- the stop-the-world baseline: one full rebuild ------------------
+    t0 = time.perf_counter()
+    stale_index = build_ivf(
+        jax.random.PRNGKey(1), items, num_clusters=c, cap=cap,
+        kmeans_iters=iters, cap_tile=cap_tile,
+    )
+    jax.block_until_ready(stale_index.lists)
+    rebuild_us = (time.perf_counter() - t0) * 1e6
+    emit(f"idx_rebuild_P{p}", rebuild_us, f"C={c};cap={cap};iters={iters}")
+
+    # -- the incremental ops, jitted once (static schedule knobs) -------
+    state = build_refresh_state(
+        jax.random.PRNGKey(1), items, c, cap, delta_cap=delta_cap,
+        kmeans_iters=iters, cap_tile=cap_tile,
+    )
+    append_m = max(256, int(p * frac) // 4)  # fixed append-batch shape
+    j_refresh = jax.jit(
+        lambda s, key, it: refresh_step(s, key, it, minibatch=minibatch)
+    )
+    j_append = jax.jit(delta_append)
+    j_compact = jax.jit(compact)
+
+    t_refresh = _time(j_refresh, state, jax.random.PRNGKey(2), items)
+    pad_ids = jnp.full((append_m,), -1, jnp.int32)
+    pad_embs = jnp.zeros((append_m, l), items.dtype)
+    t_append = _time(j_append, state, pad_ids, pad_embs)
+    t_compact = _time(j_compact, state, items)
+    # one maintenance cycle, amortized: a refresh + an append batch per
+    # step, a compaction every compact_every steps
+    amortized_us = t_refresh + t_append + t_compact / compact_every
+    emit(f"idx_refresh_step_P{p}", t_refresh, f"minibatch={minibatch};C={c}")
+    emit(f"idx_delta_append_P{p}", t_append, f"m={append_m};dcap={delta_cap}")
+    emit(f"idx_compact_P{p}", t_compact, f"C={c};cap={cap}")
+    emit(
+        f"idx_amortized_P{p}", amortized_us,
+        f"cycle=refresh+append+compact/{compact_every};"
+        f"rebuild_vs_amortized={rebuild_us / amortized_us:.1f}x",
+    )
+
+    # delta-probe query overhead: kernel query with vs without buffers
+    t_q = _time(
+        lambda q: ivf_topk(q, state.as_index(p), k, n_probe=n_probe,
+                           cap_tile=cap_tile, interpret=True),
+        queries,
+    )
+    t_qd = _time(
+        lambda q: ivf_topk(q, state.as_index(p), k, n_probe=n_probe,
+                           cap_tile=cap_tile, interpret=True,
+                           delta=state.delta()),
+        queries,
+    )
+    emit(f"idx_query_delta_overhead_P{p}", t_qd,
+         f"main_only={t_q:.0f}us;delta_probe={t_qd / max(t_q, 1e-9):.2f}x")
+
+    # -- drift sweep: maintenance ON vs OFF -----------------------------
+    key = jax.random.PRNGKey(7)
+    cur = items
+    recalls_on, recalls_off = [], []
+    for stage in range(stages):
+        key, k_churn, k_centers, k_ref = jax.random.split(key, 4)
+        cur, ids, new = _churn(k_churn, cur, k_centers, frac, l)
+        # maintenance ON: append the churned rows (fixed-size batches),
+        # one centroid refresh per stage, compact at the cadence
+        for lo in range(0, ids.shape[0], append_m):
+            bi = ids[lo : lo + append_m]
+            be = new[lo : lo + append_m]
+            if bi.shape[0] < append_m:  # pad the tail batch (id -1 = no-op)
+                bi = jnp.concatenate([bi, pad_ids[: append_m - bi.shape[0]]])
+                be = jnp.concatenate([be, pad_embs[: append_m - be.shape[0]]])
+            state = j_append(state, bi, be)
+        state = j_refresh(state, k_ref, cur)
+        if (stage + 1) % max(compact_every // stages, 1) == 0:
+            state = j_compact(state, cur)
+        exact = topk_exact(queries, cur, k)
+        rec_on = recall_at_k(
+            refresh_query(state, queries, k, n_probe=n_probe), exact
+        )
+        # maintenance OFF: the build-time index goes stale
+        from repro.mips.ivf import ivf_query
+
+        rec_off = recall_at_k(
+            ivf_query(stale_index, queries, k, n_probe=n_probe), exact
+        )
+        recalls_on.append(rec_on)
+        recalls_off.append(rec_off)
+        emit(
+            f"idx_drift_stage{stage + 1}_P{p}", 0.0,
+            f"churned={int((stage + 1) * frac * 100)}%;"
+            f"recall_on={rec_on:.4f};recall_off={rec_off:.4f};"
+            f"delta_fill={int(jnp.sum(state.delta_sizes))};"
+            f"overflow={int(jnp.max(state.overflow))}",
+        )
+
+    # refresh-vs-rebuild parity on the final drifted catalog
+    fresh = build_ivf(
+        jax.random.PRNGKey(3), cur, num_clusters=c, cap=cap,
+        kmeans_iters=iters, cap_tile=cap_tile,
+    )
+    exact = topk_exact(queries, cur, k)
+    from repro.mips.ivf import ivf_query
+
+    rec_rebuild = recall_at_k(ivf_query(fresh, queries, k, n_probe=n_probe), exact)
+    rec_maint = recalls_on[-1]
+    emit(
+        f"idx_parity_P{p}", 0.0,
+        f"recall_maintained={rec_maint:.4f};recall_rebuilt={rec_rebuild:.4f}",
+    )
+
+    # -- the analytic model + the acceptance gate -----------------------
+    m = ivf_refresh_model(
+        p, l, c=c, cap=cap, minibatch=minibatch, delta_cap=delta_cap,
+        compact_every=compact_every, kmeans_iters=iters,
+    )
+    emit(
+        f"idx_model_P{p}", 0.0,
+        f"model_rebuild_vs_amortized={m['rebuild_vs_amortized']:.0f}x;"
+        f"rebuild_s={m['rebuild_s']:.2e};amortized_s={m['amortized_s']:.2e}",
+    )
+    speedup = rebuild_us / amortized_us
+    min_on = min(recalls_on)
+    ok = speedup >= 10.0 and min_on >= 0.95
+    emit(
+        "refresh_accept", 0.0,
+        f"rebuild_vs_amortized={speedup:.1f}x;min_recall_on={min_on:.4f};"
+        f"final_recall_off={recalls_off[-1]:.4f};P={p};"
+        f"REFRESH_OK={int(ok)}",
+    )
+
+    if smoke:
+        # CI gates: parity with a rebuild, staleness actually repaired,
+        # zero-staleness of the delta path
+        assert min_on >= 0.95, recalls_on
+        assert rec_maint >= rec_rebuild - 0.05, (rec_maint, rec_rebuild)
+        assert recalls_on[-1] >= recalls_off[-1], (recalls_on, recalls_off)
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    from benchmarks.common import EMITTED, persist
+
+    EMITTED.clear()
+    t0 = time.time()
+    run(smoke=smoke)
+    if not smoke:  # CI smoke must not clobber the committed full artifact
+        persist("index", list(EMITTED), time.time() - t0)
+
+
+if __name__ == "__main__":
+    main()

@@ -117,6 +117,63 @@ def ivf_query_model(
     }
 
 
+def ivf_refresh_model(
+    p: int, l: int, *, c: int, cap: int, minibatch: int, delta_cap: int,
+    compact_every: int, kmeans_iters: int, dtype_bytes: int = 4,
+    hbm_bw: float = 819e9, flops_rate: float = 197e12,
+) -> dict:
+    """Analytic cost model of index maintenance: stop-the-world rebuild
+    vs the amortized incremental path (`repro.mips.refresh`).
+
+    rebuild    — kmeans_iters Lloyd sweeps, each a full (P, L) x (L, C)
+                 assignment (2*P*C*L FLOPs; beta + centroids re-read per
+                 sweep), then the bucketing pass (argsort + scatter of
+                 the (C, cap, L) table — beta read + table write);
+    refresh    — ONE mini-batch assignment (2*m*C*L FLOPs, m rows +
+                 centroid table moved) per scheduled step;
+    append     — m_delta rows assigned + scattered into (C, dcap);
+    compact    — one full assignment sweep (2*P*C*L, a single Lloyd
+                 iteration's cost) + the re-bucket write, amortized over
+                 `compact_every` steps.
+
+    The headline ratio `rebuild_vs_amortized` is what the BENCH_index
+    acceptance gate measures empirically: refresh+compact/compact_every
+    should beat the rebuild by >= the kmeans_iters * refresh-sparsity
+    factor (P/m per sweep)."""
+    table = c * cap * l  # the (C, cap, L) inverted-list embedding table
+    rebuild_flops = 2 * kmeans_iters * p * c * l + 2 * p * c * l  # +final assign
+    rebuild_bytes = dtype_bytes * (
+        (kmeans_iters + 1) * (p * l + c * l) + p * l + table + c * cap
+    )
+    refresh_flops = 2 * minibatch * c * l
+    refresh_bytes = dtype_bytes * (minibatch * l + 2 * c * l)
+    compact_flops = 2 * p * c * l
+    compact_bytes = dtype_bytes * (p * l + c * l + table + c * cap + p)
+    amortized_flops = refresh_flops + compact_flops / max(compact_every, 1)
+    amortized_bytes = refresh_bytes + compact_bytes / max(compact_every, 1)
+
+    def _t(flops, bytes_):
+        return max(flops / flops_rate, bytes_ / hbm_bw)
+
+    return {
+        "p": p, "l": l, "c": c, "cap": cap, "minibatch": minibatch,
+        "delta_cap": delta_cap, "compact_every": compact_every,
+        "kmeans_iters": kmeans_iters,
+        "rebuild_flops": rebuild_flops,
+        "rebuild_bytes": rebuild_bytes,
+        "refresh_flops": refresh_flops,
+        "refresh_bytes": refresh_bytes,
+        "compact_flops": compact_flops,
+        "compact_bytes": compact_bytes,
+        "amortized_flops": amortized_flops,
+        "amortized_bytes": amortized_bytes,
+        "rebuild_s": _t(rebuild_flops, rebuild_bytes),
+        "amortized_s": _t(amortized_flops, amortized_bytes),
+        "rebuild_vs_amortized": _t(rebuild_flops, rebuild_bytes)
+        / max(_t(amortized_flops, amortized_bytes), 1e-12),
+    }
+
+
 def dist_comms_model(
     b: int, s: int, k: int, l: int, p: int, n_model: int,
     *, dtype_bytes: int = 4, hbm_bw: float = 819e9, ici_bw: float = 50e9,

@@ -21,6 +21,7 @@ from benchmarks import (
     dist_step,
     fused_step,
     grad_quality,
+    index_maintenance,
     kernel_bench,
     retrieval,
     roofline,
@@ -42,6 +43,7 @@ SUITES = {
     "fused": fused_step.run,  # emits results/BENCH_fused_step.json
     "dist_step": dist_step.run,  # multi-device step (subprocess 4-dev mesh)
     "retrieval": retrieval.run,  # MIPS probe routes incl. the IVF kernel
+    "index": index_maintenance.run,  # incremental IVF maintenance vs rebuild
     "roofline": roofline.run,
 }
 

@@ -35,6 +35,7 @@ from repro.kernels.snis_covgrad.ops import DEFAULT_SAMPLE_TILE
 
 if TYPE_CHECKING:
     from repro.dist.fopo import DistConfig
+    from repro.mips.refresh import RefreshConfig, RefreshState
 
 __all__ = [
     "FOPOConfig",
@@ -85,6 +86,14 @@ class FOPOConfig:
     # device with the SNIS score partials psum'd exactly once. Implies
     # the fused kernels (the `fused` flag is moot on this path).
     dist: "DistConfig | None" = None
+    # index_refresh=RefreshConfig(every, minibatch, compact_every, ...)
+    # turns on incremental IVF index maintenance (repro.mips.refresh):
+    # the retriever takes a RefreshState operand instead of a closure-
+    # captured index (no recompiles as it updates), and the trainer
+    # dispatches mini-batch k-means refreshes / delta appends /
+    # compactions asynchronously between steps. Requires
+    # retriever="ivf_pallas". None (default) keeps the static index.
+    index_refresh: "RefreshConfig | None" = None
 
 
 def fopo_loss(
@@ -99,6 +108,7 @@ def fopo_loss(
     epsilon: float | jnp.ndarray | None = None,
     *,
     plan: ExecutionPlan | None = None,
+    index_state: "RefreshState | None" = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Scalar surrogate loss whose grad is the SNIS covariance gradient.
 
@@ -114,7 +124,10 @@ def fopo_loss(
     """
     if plan is None:
         plan = ExecutionPlan.resolve(cfg, retriever=retriever)
-    return plan.execute(policy, params, key, x, beta, reward_fn, epsilon=epsilon)
+    return plan.execute(
+        policy, params, key, x, beta, reward_fn, epsilon=epsilon,
+        index_state=index_state,
+    )
 
 
 def reinforce_loss(

@@ -50,6 +50,7 @@ if TYPE_CHECKING:
     from repro.core.proposals import ProposalSample
     from repro.dist.fopo import DistConfig
     from repro.mips.exact import TopK
+    from repro.mips.refresh import RefreshConfig, RefreshState
 
 __all__ = ["ExecutionPlan", "RETRIEVERS", "make_retriever", "resolve_interpret"]
 
@@ -172,6 +173,51 @@ def _validate(cfg: FOPOConfig, *, injected_retriever: bool, retriever_kwargs: di
             raise ValueError(
                 'retriever="sharded" needs retriever_kwargs={"mesh": ...}'
             )
+    if cfg.index_refresh is not None:
+        from repro.mips.refresh import RefreshConfig
+
+        if not isinstance(cfg.index_refresh, RefreshConfig):
+            raise ValueError(
+                "FOPOConfig.index_refresh must be a RefreshConfig (or "
+                f"None), got {type(cfg.index_refresh).__name__}"
+            )
+        rc = cfg.index_refresh
+        if injected_retriever:
+            raise ValueError(
+                "index_refresh= cannot combine with an injected retriever: "
+                "the refresh path owns retriever construction (the index "
+                "must ride as a RefreshState operand, not a closure)"
+            )
+        if cfg.retriever != "ivf_pallas":
+            raise ValueError(
+                "index_refresh= requires retriever='ivf_pallas' (the only "
+                f"maintained index layout), got {cfg.retriever!r}"
+            )
+        if rc.every < 0 or rc.compact_every < 0:
+            raise ValueError(
+                "RefreshConfig.every / compact_every must be >= 0 "
+                f"(0 disables), got {rc.every} / {rc.compact_every}"
+            )
+        if rc.every > 0 and rc.minibatch < 1:
+            raise ValueError(
+                f"RefreshConfig.minibatch must be >= 1, got {rc.minibatch}"
+            )
+        if rc.delta_cap < 1:
+            raise ValueError(
+                f"RefreshConfig.delta_cap must be >= 1, got {rc.delta_cap}"
+            )
+        if not 0.0 < rc.count_decay <= 1.0:
+            raise ValueError(
+                f"RefreshConfig.count_decay must lie in (0, 1], got "
+                f"{rc.count_decay}"
+            )
+        if cfg.dist is not None and cfg.num_items % cfg.dist.n_model:
+            raise ValueError(
+                "index_refresh under dist= needs num_items divisible by "
+                f"the mesh model axis (got {cfg.num_items} rows over "
+                f"{cfg.dist.n_model} shards): the per-shard slot_of maps "
+                "are sized by the uniform row slab"
+            )
     if not injected_retriever and cfg.dist is not None and cfg.retriever == "ivf_pallas":
         # the one retriever the dist path resolves itself (every other
         # name falls back to the sharded exact top-K merge): each model
@@ -227,6 +273,13 @@ class ExecutionPlan:
     fused_sampler: bool
     dist: DistConfig | None
     retriever: Retriever | None
+    # cfg.index_refresh -> the maintenance schedule + the initial
+    # RefreshState built from the caller's index. When set, `retriever`
+    # takes the state as a third operand — (h, beta, state) -> TopK —
+    # so the maintained index rides the step as data (no recompiles as
+    # it updates; the trainer owns the state and its refresh cadence).
+    refresh: RefreshConfig | None = None
+    initial_index_state: RefreshState | None = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -269,7 +322,41 @@ class ExecutionPlan:
             # still wins) — this is what lets them compile on TPU
             kw = dict(kw)
             kw.setdefault("interpret", interpret)
-        if retriever is None and cfg.dist is None:
+        refresh = cfg.index_refresh
+        initial_state = None
+        if refresh is not None:
+            # incremental maintenance: the index becomes a RefreshState
+            # OPERAND of the retriever — (h, beta, state) — instead of a
+            # closure capture, so refresh/append/compact never recompile
+            # the step. The plan wraps the caller's (tile-aligned) index
+            # into the initial state; the trainer owns it from there.
+            from repro.kernels.ivf_topk import ops as ivf_ops
+            from repro.mips import refresh as refresh_mod
+
+            index, n_probe, cap_tile = _resolve_ivf_pallas_kwargs(kw)
+            r_interp, top_k = kw["interpret"], cfg.top_k
+            if cfg.dist is None:
+                initial_state = refresh_mod.init_refresh_state(
+                    index, cfg.num_items, refresh.delta_cap
+                )
+                retriever = lambda h, beta, state: ivf_ops.ivf_topk(  # noqa: E731
+                    h, state.as_index(cfg.num_items), top_k,
+                    n_probe=n_probe, cap_tile=cap_tile, interpret=r_interp,
+                    delta=state.delta(),
+                )
+            else:
+                from repro.dist.fopo import dist_ivf_topk
+
+                dist_cfg = cfg.dist
+                initial_state = refresh_mod.init_refresh_sharded(
+                    index, refresh.delta_cap
+                )
+                retriever = lambda h, beta, state: dist_ivf_topk(  # noqa: E731
+                    h, refresh_mod.sharded_as_index(state, cfg.num_items),
+                    top_k, dist_cfg, n_probe=n_probe, cap_tile=cap_tile,
+                    interpret=r_interp, delta=state.delta(),
+                )
+        elif retriever is None and cfg.dist is None:
             retriever = make_retriever(cfg, **kw)
         elif retriever is None and cfg.retriever == "ivf_pallas":
             # dist x ivf_pallas: retrieval joins the plan as a per-shard
@@ -291,6 +378,8 @@ class ExecutionPlan:
             fused_sampler=bool(cfg.fused_sampler),
             dist=cfg.dist,
             retriever=retriever,
+            refresh=refresh,
+            initial_index_state=initial_state,
         )
 
     # ------------------------------------------------------------------
@@ -305,13 +394,17 @@ class ExecutionPlan:
         beta: jnp.ndarray,  # [P, L] fixed item embeddings
         reward_fn,  # actions [B, S] -> [B, S]
         epsilon: float | jnp.ndarray | None = None,
+        index_state: "RefreshState | None" = None,
     ) -> tuple[jnp.ndarray, dict]:
         """One Algorithm-1 step body — the SAME skeleton on one device
         and on the mesh; the plan hooks decide which retriever, sampler
-        and surrogate fire. Returns (loss, aux)."""
+        and surrogate fire. Returns (loss, aux). Under a refresh plan
+        ``index_state`` is the maintained index (defaults to the plan's
+        initial state) — pass the trainer's current state so retrieval
+        sees appended/refreshed items."""
         eps = self.cfg.epsilon if epsilon is None else epsilon
         h_prop = jax.lax.stop_gradient(policy.user_embedding(params, x))
-        sample = self.draw(key, h_prop, beta, eps)
+        sample = self.draw(key, h_prop, beta, eps, index_state=index_state)
         # clamp keeps reward lookups in-bounds on pre-masked (padded)
         # slots; their reward is zeroed and their SNIS weight is 0
         valid = sample.actions >= 0
@@ -321,7 +414,18 @@ class ExecutionPlan:
         return self.surrogate(policy, params, x, beta, sample, rewards)
 
     # -- retrieval ------------------------------------------------------
-    def retrieve(self, h_prop: jnp.ndarray, beta: jnp.ndarray) -> "TopK":
+    def retrieve(
+        self,
+        h_prop: jnp.ndarray,
+        beta: jnp.ndarray,
+        index_state: "RefreshState | None" = None,
+    ) -> "TopK":
+        if self.refresh is not None:
+            state = (
+                index_state if index_state is not None
+                else self.initial_index_state
+            )
+            return self.retriever(h_prop, beta, state)
         if self.retriever is not None:
             return self.retriever(h_prop, beta)
         from repro.dist.fopo import dist_sharded_topk
@@ -331,14 +435,14 @@ class ExecutionPlan:
         )
 
     # -- sampling -------------------------------------------------------
-    def draw(self, key, h_prop, beta, eps) -> "ProposalSample":
+    def draw(self, key, h_prop, beta, eps, index_state=None) -> "ProposalSample":
         """Step 4: S proposal draws per context. A static (python
         number) eps >= 1 short-circuits retrieval entirely (pure
         uniform proposal); a traced eps takes the mixture route, which
         reproduces the uniform pmf exactly at eps == 1."""
         if isinstance(eps, (int, float)) and eps >= 1.0:
             return self._draw_uniform(key, h_prop.shape[0])
-        topk = self.retrieve(h_prop, beta)
+        topk = self.retrieve(h_prop, beta, index_state)
         return self._draw_mixture(key, topk, eps)
 
     def _draw_uniform(self, key, batch: int) -> "ProposalSample":

@@ -344,6 +344,7 @@ def dist_ivf_topk(
     n_probe: int = DEFAULT_N_PROBE,
     cap_tile: int | None = None,
     interpret: bool | None = None,
+    delta=None,  # optional ([n, C, dcap] lists, [n, C, dcap, L] embs)
 ) -> TopK:
     """Sublinear proposal retrieval on the mesh: each `model` shard runs
     the tiled Pallas IVF query (`repro.kernels.ivf_topk`) over its OWN
@@ -355,35 +356,49 @@ def dist_ivf_topk(
     `build_ivf_sharded`). Downstream id routing / psum machinery is
     untouched: `merge_topk_along_axis` is the SAME K-merge the exact
     route ends in (one home for the dead-slot convention — short local
-    lists back-fill id -1 / NEG_INF and lose the merge)."""
+    lists back-fill id -1 / NEG_INF and lose the merge).
+
+    ``delta`` carries each shard's incremental-maintenance append
+    buffers (`repro.mips.refresh`, stacked on the shard axis): every
+    shard probes its own delta lists alongside its main lists, so
+    not-yet-compacted updates are retrievable on the dist route too."""
     from repro.kernels.ivf_topk import ivf_topk
     from repro.mips.ivf import ShardedIVFIndex
     from repro.mips.sharded import merge_topk_along_axis
 
-    def local(q, cent, lists, embs):
+    def local(q, cent, lists, embs, *d):
         # the shard_map block is the [1, ...] leading-axis slice — view
         # it as this device's local IVFIndex (global ids baked in)
         local_index = ShardedIVFIndex(cent, lists, embs, index.num_items).shard(0)
         loc = ivf_topk(
             q, local_index, k,
             n_probe=n_probe, cap_tile=cap_tile, interpret=interpret,
+            delta=(d[0][0], d[1][0]) if d else None,
         )
         return merge_topk_along_axis(loc.scores, loc.indices, k, dist.model_axis)
 
+    in_specs = [
+        P(dist.data_axis, None),
+        P(dist.model_axis, None, None),
+        P(dist.model_axis, None, None),
+        P(dist.model_axis, None, None, None),
+    ]
+    operands = [h, index.centroids, index.lists, index.list_embs]
+    if delta is not None:
+        in_specs += [
+            P(dist.model_axis, None, None),
+            P(dist.model_axis, None, None, None),
+        ]
+        operands += [delta[0], delta[1]]
     return shard_map(
         local,
         mesh=dist.mesh,
-        in_specs=(
-            P(dist.data_axis, None),
-            P(dist.model_axis, None, None),
-            P(dist.model_axis, None, None),
-            P(dist.model_axis, None, None, None),
-        ),
+        in_specs=tuple(in_specs),
         out_specs=TopK(
             scores=P(dist.data_axis, None), indices=P(dist.data_axis, None)
         ),
         check_vma=False,
-    )(h, index.centroids, index.lists, index.list_embs)
+    )(*operands)
 
 
 def dist_sharded_topk(

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.backend import resolve_interpret
 from repro.kernels.ivf_topk.kernel import ivf_topk_pallas
-from repro.mips.exact import TopK
+from repro.mips.exact import TopK, merge_topk
 from repro.mips.ivf import (
     DEFAULT_CAP_TILE,
     DEFAULT_N_PROBE,
@@ -59,35 +59,73 @@ def tile_align_index(index, cap_tile: int | None):
     return index, ct
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "n_probe", "cap_tile", "interpret")
-)
-def _ivf_topk_impl(
-    queries, centroids, lists, list_embs, *, k, n_probe, cap_tile, interpret
-):
-    # stage 1: centroid scores on the MXU + per-row probe selection
-    q = queries.astype(jnp.float32)
-    c_scores = q @ centroids.astype(jnp.float32).T  # [B, C]
-    _, probe = jax.lax.top_k(c_scores, n_probe)  # [B, n_probe]
-
-    # tile-align fallback for ad-hoc callers (no-op for cap_tile-built
-    # or tile_align_index'ed layouts — hot paths MUST arrive aligned,
-    # or this pad re-copies the whole table inside the traced step)
+def _probe_lists(q, probe, lists, list_embs, *, k, cap_tile, interpret):
+    """One kernel pass over one padded-list table (main OR delta) with
+    the already-selected probe ids; in-trace tile-align fallback for
+    ad-hoc callers (no-op for cap_tile-built or tile_align_index'ed
+    layouts — hot paths MUST arrive aligned, or this pad re-copies the
+    whole table inside the traced step)."""
     pad = (-lists.shape[1]) % cap_tile
     if pad:
         lists = jnp.pad(lists, ((0, 0), (0, pad)), constant_values=-1)
         list_embs = jnp.pad(list_embs, ((0, 0), (0, pad), (0, 0)))
-
-    scores, ids = ivf_topk_pallas(
+    return ivf_topk_pallas(
         q,
-        probe.astype(jnp.int32),
+        probe,
         lists,
         list_embs.astype(jnp.float32),
         k=k,
         cap_tile=cap_tile,
         interpret=interpret,
     )
-    return scores, ids
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_probe", "cap_tile", "delta_cap_tile", "interpret"),
+)
+def _ivf_topk_impl(
+    queries,
+    centroids,
+    lists,
+    list_embs,
+    delta_lists=None,
+    delta_embs=None,
+    *,
+    k,
+    n_probe,
+    cap_tile,
+    delta_cap_tile=None,
+    interpret,
+):
+    # stage 1: centroid scores on the MXU + per-row probe selection —
+    # computed ONCE; main lists and delta buffers probe the same ids
+    q = queries.astype(jnp.float32)
+    c_scores = q @ centroids.astype(jnp.float32).T  # [B, C]
+    _, probe = jax.lax.top_k(c_scores, n_probe)  # [B, n_probe]
+    probe = probe.astype(jnp.int32)
+
+    scores, ids = _probe_lists(
+        q, probe, lists, list_embs, k=k, cap_tile=cap_tile,
+        interpret=interpret,
+    )
+    if delta_lists is None:
+        return scores, ids
+
+    # delta-buffer probe: the not-yet-compacted appends ride a second
+    # (small — dcap << cap) pass of the same kernel, merged via the
+    # shared K-merge. Updated items were tombstoned (-1) in the main
+    # lists by `delta_append`, so no id appears in both passes.
+    d_scores, d_ids = _probe_lists(
+        q, probe, delta_lists, delta_embs, k=k, cap_tile=delta_cap_tile,
+        interpret=interpret,
+    )
+    merged = merge_topk(
+        jnp.concatenate([scores, d_scores], axis=-1),
+        jnp.concatenate([ids, d_ids], axis=-1),
+        k,
+    )
+    return merged.scores, merged.indices
 
 
 def ivf_topk(
@@ -98,22 +136,45 @@ def ivf_topk(
     n_probe: int = DEFAULT_N_PROBE,
     cap_tile: int | None = None,
     interpret: bool | None = None,
+    delta: tuple[jnp.ndarray, jnp.ndarray] | None = None,
 ) -> TopK:
     """queries [B, L] -> approximate TopK([B, K]) over `index`, scored
     by the tiled Pallas kernel. Same candidate set as
-    `ivf_query(index, queries, k, n_probe)`."""
+    `ivf_query(index, queries, k, n_probe)`.
+
+    ``delta`` is an optional (delta_lists [C, dcap], delta_embs
+    [C, dcap, L]) pair — the incremental-maintenance append buffers
+    (`repro.mips.refresh.RefreshState.delta()`) — probed alongside the
+    main lists with the SAME probe ids and merged into the result."""
     interpret = resolve_interpret(interpret)
     c, capp = index.lists.shape
     n_probe = min(n_probe, c)
     ct = resolve_cap_tile(cap_tile, capp)
-    scores, ids = _ivf_topk_impl(
-        queries,
-        index.centroids,
-        index.lists,
-        index.list_embs,
-        k=k,
-        n_probe=n_probe,
-        cap_tile=ct,
-        interpret=interpret,
-    )
+    if delta is None:
+        scores, ids = _ivf_topk_impl(
+            queries,
+            index.centroids,
+            index.lists,
+            index.list_embs,
+            k=k,
+            n_probe=n_probe,
+            cap_tile=ct,
+            interpret=interpret,
+        )
+    else:
+        delta_lists, delta_embs = delta
+        dct = resolve_cap_tile(cap_tile, delta_lists.shape[1])
+        scores, ids = _ivf_topk_impl(
+            queries,
+            index.centroids,
+            index.lists,
+            index.list_embs,
+            delta_lists,
+            delta_embs,
+            k=k,
+            n_probe=n_probe,
+            cap_tile=ct,
+            delta_cap_tile=dct,
+            interpret=interpret,
+        )
     return TopK(scores=scores, indices=ids)

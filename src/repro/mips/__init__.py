@@ -3,7 +3,7 @@
 All retrievers share the TopK(scores, indices) result type so the FOPO
 proposal layer is retriever-agnostic.
 """
-from repro.mips.exact import TopK, recall_at_k, topk_exact
+from repro.mips.exact import TopK, merge_topk, recall_at_k, topk_exact
 from repro.mips.ivf import (
     IVFIndex,
     ShardedIVFIndex,
@@ -11,6 +11,23 @@ from repro.mips.ivf import (
     build_ivf_sharded,
     ivf_query,
     kmeans,
+)
+from repro.mips.refresh import (
+    RefreshConfig,
+    RefreshState,
+    build_refresh_sharded,
+    build_refresh_state,
+    compact,
+    compact_sharded,
+    delta_append,
+    delta_append_sharded,
+    init_refresh_sharded,
+    init_refresh_state,
+    minibatch_kmeans_step,
+    refresh_query,
+    refresh_step,
+    refresh_step_sharded,
+    sharded_as_index,
 )
 from repro.mips.sharded import (
     make_sharded_topk_fn,
@@ -22,6 +39,7 @@ from repro.mips.streaming import topk_streaming
 
 __all__ = [
     "TopK",
+    "merge_topk",
     "recall_at_k",
     "topk_exact",
     "topk_streaming",
@@ -35,4 +53,19 @@ __all__ = [
     "merge_topk_along_axis",
     "make_sharded_topk_fn",
     "sharded_gather_rows",
+    "RefreshConfig",
+    "RefreshState",
+    "build_refresh_sharded",
+    "build_refresh_state",
+    "compact",
+    "compact_sharded",
+    "delta_append",
+    "delta_append_sharded",
+    "init_refresh_sharded",
+    "init_refresh_state",
+    "minibatch_kmeans_step",
+    "refresh_query",
+    "refresh_step",
+    "refresh_step_sharded",
+    "sharded_as_index",
 ]

@@ -24,6 +24,21 @@ def topk_exact(queries: jnp.ndarray, items: jnp.ndarray, k: int) -> TopK:
     return TopK(scores=vals, indices=idx.astype(jnp.int32))
 
 
+def merge_topk(scores: jnp.ndarray, ids: jnp.ndarray, k: int) -> TopK:
+    """THE masked candidate K-merge: [B, K'] scored candidates (id -1
+    marks a dead slot — its score is demoted to NEG_INF so it can only
+    back-fill) reduced to TopK([B, K]). One implementation shared by the
+    streaming block merge, the sharded all-gather K-merge and the IVF
+    main+delta-buffer probe merge, so the dead-slot convention cannot
+    drift between routes."""
+    from repro.constants import NEG_INF
+
+    scores = jnp.where(ids >= 0, scores, NEG_INF)
+    vals, pos = jax.lax.top_k(scores, k)
+    idx = jnp.take_along_axis(ids, pos, axis=-1)
+    return TopK(scores=vals, indices=idx.astype(jnp.int32))
+
+
 def topk_scores_only(queries: jnp.ndarray, items: jnp.ndarray, k: int) -> jnp.ndarray:
     return topk_exact(queries, items, k).scores
 

@@ -33,8 +33,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.mips.exact import TopK
-from repro.mips.streaming import NEG_INF
+from repro.mips.exact import TopK, merge_topk
+from repro.mips.streaming import NEG_INF  # noqa: F401  (re-export; kernels import it here)
 
 
 DEFAULT_CAP_TILE = 256
@@ -89,6 +89,17 @@ class ShardedIVFIndex(NamedTuple):
 # ---------------------------------------------------------------------------
 # k-means (Lloyd, fixed iterations, fully jittable)
 # ---------------------------------------------------------------------------
+
+def assign_clusters(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """THE L2 nearest-centroid rule: argmin ||x - c||^2 = argmax
+    (x.c - ||c||^2/2). Shared by the Lloyd/mini-batch k-means updates,
+    the bucketing in `build_ivf`, and the delta-append / compaction
+    path in `repro.mips.refresh`, so every maintenance op buckets
+    exactly the way the build did. Returns [P] int32."""
+    dots = points @ centroids.T  # [P, C]
+    c_norm = 0.5 * jnp.sum(centroids**2, axis=-1)  # [C]
+    return jnp.argmax(dots - c_norm[None, :], axis=-1).astype(jnp.int32)
+
 
 def _kmeanspp_init(
     key: jax.Array, points: jnp.ndarray, num_clusters: int
@@ -155,10 +166,7 @@ def kmeans(
         raise ValueError(f"unknown kmeans init {init!r}")
 
     def step(centroids, _):
-        # assignment: argmin ||x - c||^2 = argmax (x.c - ||c||^2/2)
-        dots = points @ centroids.T  # [P, C]
-        c_norm = 0.5 * jnp.sum(centroids**2, axis=-1)  # [C]
-        assign = jnp.argmax(dots - c_norm[None, :], axis=-1)  # [P]
+        assign = assign_clusters(points, centroids)  # [P]
         one_hot_sum = jax.ops.segment_sum(points, assign, num_clusters)
         counts = jax.ops.segment_sum(
             jnp.ones((p,), points.dtype), assign, num_clusters
@@ -169,15 +177,60 @@ def kmeans(
         return new_c, None
 
     centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
-    dots = points @ centroids.T
-    c_norm = 0.5 * jnp.sum(centroids**2, axis=-1)
-    assign = jnp.argmax(dots - c_norm[None, :], axis=-1).astype(jnp.int32)
-    return centroids, assign
+    return centroids, assign_clusters(points, centroids)
 
 
 # ---------------------------------------------------------------------------
 # index build / query
 # ---------------------------------------------------------------------------
+
+def bucket_items(
+    assign: jnp.ndarray,  # [P] int32 cluster of each item (or C = drop)
+    items: jnp.ndarray,  # [P, L]
+    num_clusters: int,
+    cap: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """THE padded inverted-list bucketing, fully traceable (static
+    `num_clusters`/`cap`, zero host syncs): stable-sort items by
+    cluster, slot = rank within cluster, scatter into a [C, cap] table
+    (-1 padded) + gather the matching [C, cap, L] embeddings.
+
+    Items whose rank overflows `cap` — or whose assignment is the
+    out-of-range drop bucket `num_clusters` — are DROPPED from the
+    lists (scatter mode="drop"), not clamped: under tracing there is
+    nobody to warn. `build_ivf` keeps the eager warn-and-clamp wrapper
+    around this; `repro.mips.refresh.compact` counts the drops."""
+    p = assign.shape[0]
+    counts = jax.ops.segment_sum(
+        jnp.ones((p,), jnp.int32), assign, num_clusters + 1
+    )
+    # stable order: sort items by cluster, then slot = rank within cluster
+    order = jnp.argsort(assign, stable=True)
+    sorted_assign = assign[order]
+    onset = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]]
+    )
+    rank = jnp.arange(p, dtype=jnp.int32) - onset[sorted_assign]
+    lists = jnp.full((num_clusters, cap), -1, jnp.int32)
+    lists = lists.at[sorted_assign, rank].set(
+        order.astype(jnp.int32), mode="drop"
+    )
+    safe = jnp.maximum(lists, 0)
+    list_embs = jnp.where(
+        (lists >= 0)[..., None], jnp.take(items, safe, axis=0), 0.0
+    )
+    return lists, list_embs
+
+
+def resolve_cap(cap: int, cap_tile: int | None) -> int:
+    """Round a requested list capacity up to the tile the query kernel
+    will use (the multiple-of-8 `resolve_cap_tile` rule), so the
+    tile-aligned layout contract is decided in one place."""
+    if cap_tile is None:
+        return cap
+    ct = resolve_cap_tile(cap_tile, max(cap, cap_tile))
+    return -(-cap // ct) * ct
+
 
 def build_ivf(
     key: jax.Array,
@@ -194,14 +247,37 @@ def build_ivf(
     Pallas query kernel's cap tile, so `repro.kernels.ivf_topk` consumes
     the layout without re-padding (the extra slots are ordinary -1/0
     padding — the jnp query is unaffected).
+
+    Host syncs: with BOTH ``num_clusters`` and ``cap`` passed (static),
+    the build is fully traceable — no `.item()` / `int(jnp.max(...))`
+    round-trips stalling the device queue, and the whole build jits.
+    The price is that the safety rails needing concrete counts are off
+    on that path: a cluster overflowing the trusted ``cap`` silently
+    drops its overflow items (rank-clamped scatter) instead of clamping
+    cap up with a warning, and the degenerate-clustering warning is
+    skipped. Leave ``cap=None`` (the derive-from-data default) to keep
+    the eager warn-and-clamp behaviour.
     """
     p, l = items.shape
     if num_clusters is None:
         num_clusters = max(1, int(2 ** round(jnp.log2(jnp.sqrt(p)).item())))
+        static = False
+    else:
+        static = cap is not None
     centroids, assign = kmeans(key, items, num_clusters, kmeans_iters)
     num_clusters = centroids.shape[0]  # kmeans clamps > P (with warning)
 
-    # bucket items into padded inverted lists (host-side friendly, one-time)
+    if static:
+        # the no-host-sync path: cap is trusted, bucketing fully traced
+        lists, list_embs = bucket_items(
+            assign, items, num_clusters, resolve_cap(cap, cap_tile)
+        )
+        return IVFIndex(
+            centroids=centroids, lists=lists, list_embs=list_embs, num_items=p
+        )
+
+    # derive-from-data path (eager only): size cap off the concrete
+    # cluster counts, with the warn-and-clamp safety rails
     counts = jax.ops.segment_sum(
         jnp.ones((p,), jnp.int32), assign, num_clusters
     )
@@ -217,13 +293,7 @@ def build_ivf(
         cap = max_count
     if cap is None:
         cap = int(2 ** jnp.ceil(jnp.log2(jnp.maximum(max_count, 1))).item())
-    cap = max(cap, max_count)
-    if cap_tile is not None:
-        # align to the tile the QUERY will actually use (multiple-of-8
-        # rule; 0 falls to the default tile there too), not the raw
-        # request — else the kernel re-pads per step
-        ct = resolve_cap_tile(cap_tile, max(cap, cap_tile))
-        cap = -(-cap // ct) * ct
+    cap = resolve_cap(max(cap, max_count), cap_tile)
     if num_clusters > 1 and p >= 256 and max_count > p / 2:
         # (tiny toy catalogs are exempt — every split is lopsided there)
         # one cluster swallowed most of the catalog: every probe of it
@@ -233,21 +303,7 @@ def build_ivf(
             f"{max_count}/{p} items; queries probing it cost O(P*L)",
             stacklevel=2,
         )
-
-    # stable order: sort items by cluster, then slot = rank within cluster
-    order = jnp.argsort(assign, stable=True)
-    sorted_assign = assign[order]
-    # rank within cluster via cumulative count
-    onset = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]]
-    )
-    rank = jnp.arange(p, dtype=jnp.int32) - onset[sorted_assign]
-    lists = jnp.full((num_clusters, cap), -1, jnp.int32)
-    lists = lists.at[sorted_assign, rank].set(order.astype(jnp.int32))
-    safe = jnp.maximum(lists, 0)
-    list_embs = jnp.where(
-        (lists >= 0)[..., None], jnp.take(items, safe, axis=0), 0.0
-    )
+    lists, list_embs = bucket_items(assign, items, num_clusters, cap)
     return IVFIndex(
         centroids=centroids, lists=lists, list_embs=list_embs, num_items=p
     )
@@ -327,7 +383,4 @@ def ivf_query(
     cand_ids = cand_ids.reshape(b, -1)  # [B, n_probe*cap]
     cand_embs = cand_embs.reshape(b, cand_ids.shape[1], -1)
     scores = jnp.einsum("bl,bnl->bn", queries, cand_embs)  # [B, n_probe*cap]
-    scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
-    vals, pos = jax.lax.top_k(scores, k)
-    idx = jnp.take_along_axis(cand_ids, pos, axis=-1)
-    return TopK(scores=vals, indices=idx)
+    return merge_topk(scores, cand_ids, k)  # pad slots (-1) back-fill only

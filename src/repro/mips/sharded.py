@@ -21,7 +21,7 @@ from repro.compat import axis_size as compat_axis_size
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.mips.exact import TopK
+from repro.mips.exact import TopK, merge_topk
 from repro.mips.streaming import topk_streaming
 
 
@@ -32,21 +32,16 @@ def merge_topk_along_axis(
     axis: str,
 ) -> TopK:
     """Call INSIDE shard_map: all-gather each shard's [B, K'] candidates
-    along `axis` and reduce to the replicated global TopK([B, K]). THE
-    one K-merge — the exact streaming route and the IVF probe route
-    both end here, so the dead-slot convention (id -1 scores NEG_INF,
-    back-filled when candidates run short) lives in one place."""
-    from repro.constants import NEG_INF
-
-    scores = jnp.where(gids >= 0, scores, NEG_INF)
+    along `axis` and reduce to the replicated global TopK([B, K]) via
+    the shared `merge_topk` (one home for the dead-slot convention: id
+    -1 scores NEG_INF and is back-filled when candidates run short) —
+    the exact streaming route and the IVF probe route both end here."""
     all_scores = jax.lax.all_gather(scores, axis)  # [n, B, K']
     all_ids = jax.lax.all_gather(gids, axis)
     n, b, local_k = all_scores.shape
     cat_s = jnp.transpose(all_scores, (1, 0, 2)).reshape(b, n * local_k)
     cat_i = jnp.transpose(all_ids, (1, 0, 2)).reshape(b, n * local_k)
-    vals, pos = jax.lax.top_k(cat_s, k)
-    idx = jnp.take_along_axis(cat_i, pos, axis=-1)
-    return TopK(scores=vals, indices=idx)
+    return merge_topk(cat_s, cat_i, k)
 
 
 def sharded_topk(

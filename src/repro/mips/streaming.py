@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.constants import NEG_INF
-from repro.mips.exact import TopK
+from repro.mips.exact import TopK, merge_topk
 
 
 def _pad_items(items: jnp.ndarray, block_items: int):
@@ -43,15 +43,13 @@ def topk_streaming(
         s = (queries @ blk.T).astype(jnp.float32)  # [B, block]
         base = blk_id * block_items
         ids = base + jnp.arange(block_items, dtype=jnp.int32)  # [block]
-        valid = ids < p
-        s = jnp.where(valid[None, :], s, NEG_INF)
+        ids = jnp.where(ids < p, ids, -1)  # catalog pad rows are dead slots
         cat_s = jnp.concatenate([best_s, s], axis=-1)  # [B, K+block]
         cat_i = jnp.concatenate(
             [best_i, jnp.broadcast_to(ids, (b, block_items))], axis=-1
         )
-        new_s, pos = jax.lax.top_k(cat_s, k)
-        new_i = jnp.take_along_axis(cat_i, pos, axis=-1)
-        return (new_s, new_i), None
+        merged = merge_topk(cat_s, cat_i, k)  # the shared block K-merge
+        return (merged.scores, merged.indices), None
 
     (scores, indices), _ = jax.lax.scan(
         body,

@@ -102,15 +102,28 @@ class FOPOTrainer:
             cfg.batch_size,
             seed=cfg.seed,
         )
+        # incremental index maintenance (cfg.fopo.index_refresh): the
+        # plan built the initial RefreshState from the caller's index;
+        # the trainer owns it from here and dispatches the jitted
+        # maintenance ops asynchronously between steps (see train())
+        self.index_state = (
+            self.plan.initial_index_state if self.plan is not None else None
+        )
+        self._refresh_fns = self._build_refresh() if self.index_state is not None else None
+        self._refresh_key = jax.random.PRNGKey(cfg.seed + 31)
         self._train_step = self._build_step()
 
     # ------------------------------------------------------------------
     def _build_step(self) -> Callable:
         cfg = self.cfg
-        policy, beta = self.policy, self.beta
+        policy = self.policy
         optimizer = self.optimizer
 
-        def loss_fn(params, key, contexts, positives, eps):
+        # beta and index_state ride as OPERANDS, not closure captures:
+        # `update_items` (catalog churn) and the async refresh ops
+        # produce new arrays each cadence — captured values would pin
+        # the trace to the build-time tables and silently serve them
+        def loss_fn(params, key, contexts, positives, eps, beta, index_state):
             reward_fn = make_session_reward(positives)
             if cfg.estimator == "fopo":
                 loss, aux = fopo_loss(
@@ -118,6 +131,7 @@ class FOPOTrainer:
                     cfg.fopo, self.retriever,
                     epsilon=eps if cfg.adaptive_eps else None,
                     plan=self.plan,  # resolved once in __init__
+                    index_state=index_state,
                 )
                 return loss, aux
             if cfg.estimator == "reinforce":
@@ -138,9 +152,11 @@ class FOPOTrainer:
             raise ValueError(cfg.estimator)
 
         @jax.jit
-        def train_step(params, opt_state, key, contexts, positives, eps):
+        def train_step(
+            params, opt_state, key, contexts, positives, eps, beta, index_state
+        ):
             (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, key, contexts, positives, eps
+                params, key, contexts, positives, eps, beta, index_state
             )
             if cfg.grad_clip > 0:
                 grads = clip_by_global_norm(grads, cfg.grad_clip)
@@ -148,6 +164,70 @@ class FOPOTrainer:
             return params, opt_state, loss, aux
 
         return train_step
+
+    def _build_refresh(self) -> dict:
+        """jit the maintenance ops ONCE with the schedule's static knobs
+        (minibatch / count_decay / num_items baked in): every later
+        dispatch reuses the trace — no recompiles, no host syncs."""
+        from functools import partial
+
+        from repro.mips import refresh as R
+
+        rc = self.plan.refresh
+        p = self.cfg.fopo.num_items
+        if self.cfg.fopo.dist is None:
+            return {
+                "refresh": jax.jit(partial(
+                    R.refresh_step,
+                    minibatch=rc.minibatch, count_decay=rc.count_decay,
+                )),
+                "append": jax.jit(partial(R.delta_append)),
+                "compact": jax.jit(partial(R.compact)),
+            }
+        return {
+            "refresh": jax.jit(partial(
+                R.refresh_step_sharded,
+                minibatch=rc.minibatch, count_decay=rc.count_decay,
+            )),
+            "append": jax.jit(partial(R.delta_append_sharded, num_items=p)),
+            "compact": jax.jit(partial(R.compact_sharded)),
+        }
+
+    # ------------------------------------------------------------------
+    def update_items(self, ids, embs) -> None:
+        """Catalog churn entry point: overwrite beta rows `ids` with
+        `embs` and (when maintaining an index) delta-append them so the
+        very next retrieval can serve the fresh embeddings — no rebuild.
+        Fixed-size batches keep the append on its single trace; pad
+        with id -1 rows to reuse a batch shape."""
+        ids = jnp.asarray(ids, jnp.int32)
+        embs = jnp.asarray(embs, self.beta.dtype)
+        # pad rows (-1) scatter to the OOB sentinel P and are dropped —
+        # never -1 (wraps) or a clamped 0 (would race a real row-0 write)
+        idx = jnp.where(ids >= 0, ids, self.beta.shape[0])
+        self.beta = self.beta.at[idx].set(embs, mode="drop")
+        if self._refresh_fns is not None:
+            self.index_state = self._refresh_fns["append"](
+                self.index_state, ids, embs
+            )
+
+    def _maybe_refresh_index(self) -> None:
+        """The async trainer hook: dispatch this step's scheduled
+        maintenance WITHOUT blocking — JAX's async dispatch is the
+        separate stream (the fused train step already in flight never
+        waits on it; the next step consumes the new state through an
+        ordinary data dependency)."""
+        rc = self.plan.refresh
+        done = self.step + 1  # steps completed incl. the one in flight
+        if rc.every and done % rc.every == 0:
+            self._refresh_key, sub = jax.random.split(self._refresh_key)
+            self.index_state = self._refresh_fns["refresh"](
+                self.index_state, sub, self.beta
+            )
+        if rc.compact_every and done % rc.compact_every == 0:
+            self.index_state = self._refresh_fns["compact"](
+                self.index_state, self.beta
+            )
 
     # ------------------------------------------------------------------
     def _place_batch(self, arr) -> jnp.ndarray:
@@ -216,7 +296,13 @@ class FOPOTrainer:
                 self._place_batch(batch["contexts"]),
                 self._place_batch(batch["positives"]),
                 eps,
+                self.beta,
+                self.index_state,
             )
+            if self._refresh_fns is not None:
+                # dispatched async while the step above is in flight —
+                # the step never blocks on maintenance (and vice versa)
+                self._maybe_refresh_index()
             jax.block_until_ready(loss)
             history["step_time"].append(time.perf_counter() - t0)
             history["loss"].append(float(loss))

@@ -67,13 +67,36 @@ def test_kmeans_clamps_excess_clusters():
 
 
 def test_build_ivf_cap_overflow_warns_not_misbuckets():
-    """An explicit cap smaller than the largest cluster is clamped UP
-    with a warning — never silently dropping items from the list."""
+    """On the derive-from-data path (cap given, num_clusters derived), a
+    cap smaller than the largest cluster is clamped UP with a warning —
+    never silently dropping items from the list."""
     items = jax.random.normal(jax.random.PRNGKey(0), (200, 8))
     with pytest.warns(UserWarning, match="clamping cap"):
-        index = build_ivf(jax.random.PRNGKey(1), items, num_clusters=4, cap=2)
+        index = build_ivf(jax.random.PRNGKey(1), items, cap=2)
     ids = np.asarray(index.lists)
     assert sorted(ids[ids >= 0].tolist()) == list(range(200))
+
+
+def test_build_ivf_static_path_jits_without_host_sync():
+    """With BOTH num_clusters and cap passed, the build is fully
+    traceable (zero host syncs — the whole thing jits); a too-small cap
+    drops overflow ranks instead of clamping, and every id that IS kept
+    is bucketed correctly."""
+    items = jax.random.normal(jax.random.PRNGKey(0), (200, 8))
+    build = jax.jit(
+        lambda k, it: build_ivf(k, it, num_clusters=4, cap=2, kmeans_iters=4)
+    )
+    index = build(jax.random.PRNGKey(1), items)  # traces => no .item()
+    assert index.lists.shape == (4, 2)
+    ids = np.asarray(index.lists)
+    kept = ids[ids >= 0]
+    assert len(set(kept.tolist())) == len(kept)  # no duplicate ids
+    # generous static cap keeps everything — parity with the eager path
+    full = build_ivf(
+        jax.random.PRNGKey(1), items, num_clusters=4, cap=256, kmeans_iters=4
+    )
+    fids = np.asarray(full.lists)
+    assert sorted(fids[fids >= 0].tolist()) == list(range(200))
 
 
 def test_build_ivf_cap_tile_alignment():

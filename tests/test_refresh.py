@@ -1,0 +1,462 @@
+"""Incremental IVF index maintenance (repro.mips.refresh): mini-batch
+k-means quality, delta-append/compaction correctness, the no-host-sync
+contract, plan/trainer wiring, and the staleness regression gate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import clustered_catalog
+from repro.kernels.ivf_topk import ivf_topk
+from repro.mips.exact import recall_at_k, topk_exact
+from repro.mips.ivf import build_ivf, ivf_query, kmeans
+from repro.mips.refresh import (
+    RefreshConfig,
+    build_refresh_sharded,
+    build_refresh_state,
+    compact,
+    compact_sharded,
+    delta_append,
+    delta_append_sharded,
+    init_refresh_state,
+    minibatch_kmeans_step,
+    refresh_query,
+    refresh_step,
+    refresh_step_sharded,
+)
+
+
+def _quant_err(points, centroids):
+    d2 = (
+        jnp.sum(points**2, -1)[:, None]
+        - 2 * points @ centroids.T
+        + jnp.sum(centroids**2, -1)[None, :]
+    )
+    return float(jnp.mean(jnp.min(d2, axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# mini-batch k-means
+# ---------------------------------------------------------------------------
+
+def test_minibatch_kmeans_quantization_near_lloyd():
+    """Warm-started mini-batch updates must land within tolerance of
+    full Lloyd's quantization error on a clustered catalog — the whole
+    premise of refreshing centroids without the O(iters*P*C*L) sweep."""
+    p, l, c_true, c = 2048, 16, 32, 32
+    items, _ = map(jnp.asarray, clustered_catalog(p, l, c_true, 4))
+    cent_lloyd, _ = kmeans(jax.random.PRNGKey(0), items, c, iters=8)
+    err_lloyd = _quant_err(items, cent_lloyd)
+
+    # warm start = 1 Lloyd iteration (the build), then mini-batch only
+    cent, _ = kmeans(jax.random.PRNGKey(0), items, c, iters=1)
+    counts = jnp.zeros((c,), jnp.float32)
+    key = jax.random.PRNGKey(1)
+    step = jax.jit(
+        lambda ce, co, batch: minibatch_kmeans_step(ce, co, batch)
+    )
+    for _ in range(24):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (256,), 0, p)
+        cent, counts = step(cent, counts, items[idx])
+    err_mb = _quant_err(items, cent)
+    assert err_mb <= err_lloyd * 1.25 + 1e-6, (err_mb, err_lloyd)
+
+
+def test_minibatch_kmeans_tracks_drift():
+    """count_decay < 1 keeps the learning rate floored, so centroids
+    FOLLOW a shifted distribution instead of freezing under the weight
+    of historical counts."""
+    l, c = 8, 4
+    key = jax.random.PRNGKey(0)
+    base = jax.random.normal(key, (c, l)) * 3
+    cent = base + 0.1
+    counts = jnp.full((c,), 1e4, jnp.float32)  # heavy history
+    shifted = base + 2.0
+    for i in range(200):
+        k = jax.random.fold_in(key, i)
+        batch = shifted[jax.random.randint(k, (64,), 0, c)]
+        batch = batch + 0.01 * jax.random.normal(k, (64, l))
+        cent, counts = minibatch_kmeans_step(
+            cent, counts, batch, count_decay=0.9
+        )
+    # with decay the EMA forgets the 1e4 history and closes most of the
+    # 2.0 shift; without it lr ~ 64/1e4 would barely move
+    assert float(jnp.max(jnp.linalg.norm(cent - shifted, axis=-1))) < 0.5
+
+
+def test_minibatch_kmeans_empty_clusters_unmoved():
+    cent = jnp.eye(4, 8) * 10
+    counts = jnp.ones((4,), jnp.float32)
+    batch = jnp.tile(cent[0], (16, 1))  # all mass on cluster 0
+    new, _ = minibatch_kmeans_step(cent, counts, batch)
+    assert np.allclose(np.asarray(new[1:]), np.asarray(cent[1:]))
+
+
+# ---------------------------------------------------------------------------
+# the no-host-sync contract (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_refresh_path_contains_zero_host_syncs():
+    """The ENTIRE maintenance cycle — refresh_step -> delta_append ->
+    compact -> query — must trace under jit as ONE function of array
+    operands: any `.item()` / `int(...)` on a traced value raises at
+    trace time, so this test both verifies the contract and pins it."""
+    p, l, c, cap, dcap, m = 300, 8, 8, 64, 16, 12
+    items = jax.random.normal(jax.random.PRNGKey(0), (p, l))
+    state = build_refresh_state(
+        jax.random.PRNGKey(1), items, c, cap, delta_cap=dcap, kmeans_iters=2
+    )
+
+    @jax.jit
+    def cycle(state, key, items, ids, embs, q):
+        state = refresh_step(state, key, items, minibatch=64)
+        state = delta_append(state, ids, embs)
+        out_mid = refresh_query(state, q, 8, n_probe=4)
+        state = compact(state, items)
+        return state, out_mid, refresh_query(state, q, 8, n_probe=4)
+
+    ids = jnp.arange(m, dtype=jnp.int32)
+    embs = jax.random.normal(jax.random.PRNGKey(2), (m, l))
+    q = jax.random.normal(jax.random.PRNGKey(3), (4, l))
+    # tracing succeeds => zero host syncs; also check it only traces ONCE
+    # across refreshed states (static shapes end to end)
+    items2 = items.at[ids].set(embs)
+    state2, _, _ = cycle(state, jax.random.PRNGKey(4), items2, ids, embs, q)
+    cycle(state2, jax.random.PRNGKey(5), items2, ids, embs, q)
+    assert cycle._cache_size() == 1
+
+
+def test_static_build_ivf_traces():
+    """Satellite: with static num_clusters AND cap, build_ivf itself is
+    host-sync-free (jittable end to end, k-means++ included)."""
+    items = jax.random.normal(jax.random.PRNGKey(0), (256, 8))
+    built = jax.jit(
+        lambda k, it: build_ivf(k, it, num_clusters=8, cap=64, kmeans_iters=3)
+    )(jax.random.PRNGKey(1), items)
+    lists = np.asarray(built.lists)
+    assert sorted(lists[lists >= 0].tolist()) == list(range(256))
+
+
+# ---------------------------------------------------------------------------
+# delta appends + compaction
+# ---------------------------------------------------------------------------
+
+def _setup(p=400, l=12, c=8, cap=128, dcap=32, seed=0):
+    items = jax.random.normal(jax.random.PRNGKey(seed), (p, l))
+    state = build_refresh_state(
+        jax.random.PRNGKey(seed + 1), items, c, cap, delta_cap=dcap,
+        kmeans_iters=4,
+    )
+    return items, state
+
+
+def test_delta_append_zero_staleness():
+    """An appended (updated) item is retrievable IMMEDIATELY with its
+    fresh embedding, and its stale main-list copy is tombstoned — a
+    query can never serve the superseded vector."""
+    items, state = _setup()
+    p, l = items.shape
+    # make the updated rows unmissable for a known query direction
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, l))
+    ids = jnp.array([5, 17, 300], dtype=jnp.int32)
+    new = jnp.tile(q * 4.0, (3, 1))  # huge inner product with q
+    state = delta_append(state, ids, new)
+    out = refresh_query(state, q, 3, n_probe=state.num_clusters)
+    assert set(np.asarray(out.indices)[0].tolist()) == {5, 17, 300}
+    # each appears exactly once across main+delta (tombstone worked)
+    all_ids = np.concatenate(
+        [np.asarray(state.lists).ravel(), np.asarray(state.delta_lists).ravel()]
+    )
+    for i in (5, 17, 300):
+        assert int((all_ids == i).sum()) == 1
+
+
+def test_append_compact_matches_fresh_build_retrieved_sets():
+    """After churn + compaction, the maintained index retrieves the
+    SAME sets as bucketing the current catalog fresh under the same
+    centroids (compaction == fresh build modulo centroid history)."""
+    items, state = _setup()
+    p, l = items.shape
+    m = 40
+    ids = jax.random.choice(jax.random.PRNGKey(3), p, (m,), replace=False)
+    ids = ids.astype(jnp.int32)
+    new = jax.random.normal(jax.random.PRNGKey(4), (m, l))
+    cur = items.at[ids].set(new)
+    state = delta_append(state, ids, new)
+    state = compact(state, cur)
+    assert int(state.delta_sizes.sum()) == 0  # buffers cleared
+
+    # fresh reference: same centroids, same bucketing rule, current rows
+    fresh = init_refresh_state(
+        build_index_like(state, cur), p, state.delta_cap
+    )
+    q = jax.random.normal(jax.random.PRNGKey(5), (6, l))
+    a = refresh_query(state, q, 16, n_probe=4)
+    b = refresh_query(fresh, q, 16, n_probe=4)
+    assert np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_allclose(
+        np.asarray(a.scores), np.asarray(b.scores), rtol=1e-5, atol=1e-5
+    )
+
+
+def build_index_like(state, items):
+    """Bucket `items` fresh under `state`'s centroids (the compaction
+    oracle)."""
+    from repro.mips.ivf import IVFIndex, assign_clusters, bucket_items
+
+    lists, embs = bucket_items(
+        assign_clusters(items, state.centroids), items,
+        state.num_clusters, state.cap,
+    )
+    return IVFIndex(state.centroids, lists, embs, num_items=items.shape[0])
+
+
+def test_delta_overflow_counted_then_recovered_by_compact():
+    items, state = _setup(dcap=2)  # tiny buffers force overflow
+    p, l = items.shape
+    m = 64
+    ids = jnp.arange(m, dtype=jnp.int32)
+    new = jax.random.normal(jax.random.PRNGKey(9), (m, l))
+    state = delta_append(state, ids, new)
+    assert int(state.overflow) > 0  # drops are COUNTED, not silent
+    cur = items.at[ids].set(new)
+    state = compact(state, cur)
+    assert int(state.overflow) == 0  # full re-bucket recovers every row
+    lists = np.asarray(state.lists)
+    assert sorted(lists[lists >= 0].tolist()) == list(range(p))
+
+
+def test_delta_append_invalid_ids_are_noops():
+    items, state = _setup()
+    before = jax.tree.map(np.asarray, state)
+    ids = jnp.full((8,), -1, jnp.int32)
+    embs = jnp.ones((8, items.shape[1]))
+    after = delta_append(state, ids, embs)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# staleness regression: drifted beta, refresh on vs off
+# ---------------------------------------------------------------------------
+
+def test_staleness_regression_recall_under_drift():
+    """The acceptance-criterion regression at test scale: churn the
+    catalog in stages; the maintained index must hold recall@64 >= 0.95
+    against the CURRENT embeddings while the stale build-time index
+    degrades below it."""
+    p, l, c_true, c, k = 4096, 16, 64, 64, 64
+    items, queries = map(jnp.asarray, clustered_catalog(p, l, c_true, 8))
+    stale = build_ivf(
+        jax.random.PRNGKey(1), items, num_clusters=c, cap=256,
+        kmeans_iters=4, cap_tile=32,
+    )
+    state = build_refresh_state(
+        jax.random.PRNGKey(1), items, c, 256, delta_cap=64,
+        kmeans_iters=4, cap_tile=32,
+    )
+    key = jax.random.PRNGKey(2)
+    cur = items
+    for stage in range(4):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        m = p // 20  # 5% churn per stage
+        ids = jax.random.choice(k1, p, (m,), replace=False).astype(jnp.int32)
+        new = jnp.asarray(
+            clustered_catalog(m, l, 16, 1, seed=stage + 10)[0]
+        )
+        cur = cur.at[ids].set(new)
+        state = delta_append(state, ids, new)
+        state = refresh_step(state, k3, cur, minibatch=512)
+        if stage % 2 == 1:
+            state = compact(state, cur)
+    exact = topk_exact(queries, cur, k)
+    rec_on = recall_at_k(refresh_query(state, queries, k, n_probe=8), exact)
+    rec_off = recall_at_k(ivf_query(stale, queries, k, n_probe=8), exact)
+    assert rec_on >= 0.95, rec_on
+    assert rec_on > rec_off, (rec_on, rec_off)
+
+
+# ---------------------------------------------------------------------------
+# kernel delta probe
+# ---------------------------------------------------------------------------
+
+def test_kernel_delta_probe_matches_jnp_reference():
+    items, state = _setup(p=500, cap=64, dcap=16)
+    p, l = items.shape
+    ids = jnp.array([2, 77, 432], dtype=jnp.int32)
+    new = jax.random.normal(jax.random.PRNGKey(11), (3, l)) * 2
+    state = delta_append(state, ids, new)
+    q = jax.random.normal(jax.random.PRNGKey(12), (5, l))
+    ref = refresh_query(state, q, 16, n_probe=4)
+    ker = ivf_topk(
+        q, state.as_index(p), 16, n_probe=4, cap_tile=32, interpret=True,
+        delta=state.delta(),
+    )
+    assert np.array_equal(
+        np.sort(np.asarray(ref.indices), -1), np.sort(np.asarray(ker.indices), -1)
+    )
+    np.testing.assert_allclose(
+        np.sort(np.asarray(ref.scores), -1),
+        np.sort(np.asarray(ker.scores), -1),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharded route
+# ---------------------------------------------------------------------------
+
+def test_sharded_refresh_global_ids_and_routing():
+    p, l, n = 512, 12, 4
+    items = jax.random.normal(jax.random.PRNGKey(0), (p, l))
+    st = build_refresh_sharded(
+        jax.random.PRNGKey(1), items, n, 8, 64, delta_cap=8, kmeans_iters=3
+    )
+    rows = p // n
+    # every shard's lists hold only its own slab's GLOBAL ids
+    lists = np.asarray(st.lists)
+    for d in range(n):
+        own = lists[d][lists[d] >= 0]
+        assert ((own >= d * rows) & (own < (d + 1) * rows)).all()
+    # appends route to the OWNING shard only
+    ids = jnp.array([5, 200, 511], dtype=jnp.int32)
+    new = jax.random.normal(jax.random.PRNGKey(2), (3, l))
+    st2 = delta_append_sharded(st, ids, new, p)
+    fills = np.asarray(st2.delta_sizes.sum(-1))
+    assert fills.tolist() == [1, 1, 1, 0] or fills.sum() == 3
+    per_shard = [
+        set(np.asarray(st2.delta_lists[d]).ravel().tolist()) - {-1}
+        for d in range(n)
+    ]
+    assert per_shard[0] == {5} and per_shard[1] == {200} and per_shard[3] == {511}
+    # refresh + compact keep the stacked layout + global completeness
+    cur = items.at[ids].set(new)
+    st3 = refresh_step_sharded(st2, jax.random.PRNGKey(3), cur, minibatch=64)
+    st4 = compact_sharded(st3, cur)
+    lists = np.asarray(st4.lists)
+    assert sorted(lists[lists >= 0].tolist()) == list(range(p))
+    assert int(st4.delta_sizes.sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# plan + trainer wiring
+# ---------------------------------------------------------------------------
+
+def _plan_fixture(p=300, l=12, refresh=None, **fopo_kw):
+    from repro.core.fopo import FOPOConfig
+    from repro.core.plan import ExecutionPlan
+
+    items = jax.random.normal(jax.random.PRNGKey(0), (p, l))
+    index = build_ivf(
+        jax.random.PRNGKey(1), items, num_clusters=8, cap=128,
+        kmeans_iters=3, cap_tile=32,
+    )
+    cfg = FOPOConfig(
+        num_items=p, num_samples=32, top_k=16, retriever="ivf_pallas",
+        index_refresh=refresh, **fopo_kw,
+    )
+    plan = ExecutionPlan.resolve(
+        cfg, retriever_kwargs={"index": index, "n_probe": 4, "cap_tile": 32}
+    )
+    return items, index, plan
+
+
+def test_plan_validates_refresh_config():
+    from repro.core.fopo import FOPOConfig
+    from repro.core.plan import ExecutionPlan
+
+    base = dict(num_items=100, num_samples=8, top_k=4)
+    items = jax.random.normal(jax.random.PRNGKey(0), (100, 8))
+    index = build_ivf(jax.random.PRNGKey(1), items, num_clusters=4,
+                      cap=32, kmeans_iters=2, cap_tile=8)
+    kw = {"retriever_kwargs": {"index": index, "n_probe": 2, "cap_tile": 8}}
+    with pytest.raises(ValueError, match="requires retriever='ivf_pallas'"):
+        ExecutionPlan.resolve(FOPOConfig(
+            retriever="streaming", index_refresh=RefreshConfig(), **base
+        ))
+    with pytest.raises(ValueError, match="must be a RefreshConfig"):
+        ExecutionPlan.resolve(FOPOConfig(
+            retriever="ivf_pallas", index_refresh={"every": 1}, **base
+        ), **kw)
+    with pytest.raises(ValueError, match="minibatch"):
+        ExecutionPlan.resolve(FOPOConfig(
+            retriever="ivf_pallas",
+            index_refresh=RefreshConfig(minibatch=0), **base
+        ), **kw)
+    with pytest.raises(ValueError, match="count_decay"):
+        ExecutionPlan.resolve(FOPOConfig(
+            retriever="ivf_pallas",
+            index_refresh=RefreshConfig(count_decay=0.0), **base
+        ), **kw)
+    with pytest.raises(ValueError, match="injected retriever"):
+        ExecutionPlan.resolve(
+            FOPOConfig(retriever="ivf_pallas",
+                       index_refresh=RefreshConfig(), **base),
+            retriever=lambda h, b: None,
+        )
+
+
+def test_plan_refresh_retriever_takes_state_operand():
+    """The refresh retriever sees the index THROUGH the state operand:
+    retrieval against an updated state serves the appended embedding
+    without re-resolving the plan (no closure-captured index)."""
+    items, index, plan = _plan_fixture(
+        refresh=RefreshConfig(every=1, minibatch=64, compact_every=4,
+                              delta_cap=16)
+    )
+    assert plan.initial_index_state is not None
+    p, l = items.shape
+    q = jax.random.normal(jax.random.PRNGKey(7), (2, l))
+    new = jnp.tile(q[:1] * 4.0, (1, 1))
+    st = delta_append(
+        plan.initial_index_state, jnp.array([42], jnp.int32), new
+    )
+    out = plan.retrieve(q, items, index_state=st)
+    assert 42 in np.asarray(out.indices)[0].tolist()
+    # and the default (initial) state does NOT serve it at the top
+    out0 = plan.retrieve(q, items)
+    assert np.asarray(out0.indices)[0, 0] != 42
+
+
+def test_trainer_refresh_hook_end_to_end():
+    from repro.core.fopo import FOPOConfig
+    from repro.data import SyntheticConfig, generate_sessions
+    from repro.train.trainer import FOPOTrainer, TrainerConfig
+
+    ds = generate_sessions(SyntheticConfig(
+        num_items=300, num_users=64, embed_dim=16, session_len=8, seed=0
+    ))
+    items = jnp.asarray(ds.item_embeddings)
+    index = build_ivf(
+        jax.random.PRNGKey(1), items, num_clusters=8, cap=128,
+        kmeans_iters=3, cap_tile=32,
+    )
+    cfg = TrainerConfig(
+        estimator="fopo",
+        fopo=FOPOConfig(
+            num_items=300, num_samples=32, top_k=16, retriever="ivf_pallas",
+            index_refresh=RefreshConfig(every=2, minibatch=64,
+                                        compact_every=4, delta_cap=16),
+        ),
+        batch_size=8, num_steps=4, checkpoint_every=0,
+    )
+    tr = FOPOTrainer(
+        cfg, ds, retriever_kwargs={"index": index, "n_probe": 4,
+                                   "cap_tile": 32}
+    )
+    assert tr.index_state is not None
+    cent0 = np.asarray(tr.index_state.centroids)
+    hist = tr.train(num_steps=4)
+    assert np.isfinite(hist["loss"]).all()
+    # the async hook actually ran: centroids moved (every=2 over 4
+    # steps) and the step-4 compaction cleared the delta buffers
+    assert not np.array_equal(cent0, np.asarray(tr.index_state.centroids))
+    assert int(tr.index_state.delta_sizes.sum()) == 0
+    # catalog churn: beta row updated AND immediately indexed
+    new = jnp.ones((1, 16)) * 2.0
+    tr.update_items(jnp.array([7], jnp.int32), new)
+    assert np.allclose(np.asarray(tr.beta[7]), 2.0)
+    assert int(tr.index_state.delta_sizes.sum()) == 1
+    hist = tr.train(num_steps=2)
+    assert np.isfinite(hist["loss"]).all()

@@ -1,0 +1,110 @@
+"""Guarded-step overhead benchmark: emits results/BENCH_guard.json.
+
+The health guard's contract is two-sided: bitwise no-op on the
+trajectory AND near-free on the clock. This suite runs the same
+trainer twice — unguarded, and guarded with every check armed
+(NaN/Inf, grad spike, ESS floor, weight collapse) — at the paper-ish
+CPU shape (S=1000 draws, K=256 retrieved over a 10k catalog) and
+reports the per-step overhead, hard-gating it under 5%. The final
+params are compared bitwise, so the artifact also witnesses the no-op
+guarantee at benchmark scale, not just at test scale.
+
+    PYTHONPATH=src python -m benchmarks.guard_overhead           # full
+    PYTHONPATH=src python -m benchmarks.guard_overhead --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import statistics
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, twitch_small
+from repro.core import FOPOConfig
+from repro.health import HealthConfig
+from repro.train import FOPOTrainer, TrainerConfig
+
+OVERHEAD_BUDGET_PCT = 5.0
+
+
+def _make(train_ds, health, *, num_samples, top_k, steps, batch):
+    p = train_ds.item_embeddings.shape[0]
+    fopo = FOPOConfig(
+        num_items=p, num_samples=num_samples, top_k=min(top_k, p),
+        epsilon=0.8, retriever="streaming",
+    )
+    cfg = TrainerConfig(
+        estimator="fopo", fopo=fopo, batch_size=batch,
+        learning_rate=3e-3, num_steps=steps, checkpoint_every=0,
+        seed=0, health=health,
+    )
+    return FOPOTrainer(cfg, train_ds)
+
+
+def _median_step_us(trainer, steps) -> float:
+    trainer.train(1)  # compile outside the timed region
+    hist = trainer.train(steps - 1)
+    return statistics.median(hist["step_time"]) * 1e6
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        embed, items, num_samples, top_k, steps, batch = 16, 2000, 128, 64, 12, 16
+    else:
+        embed, items, num_samples, top_k, steps, batch = 32, 10_000, 1000, 256, 40, 32
+    train_ds, _ = twitch_small(embed_dim=embed, num_items=items)
+
+    armed = HealthConfig(
+        ess_floor=1.0, grad_spike_factor=100.0, max_wbar_ceiling=0.999,
+    )
+    bare = _make(train_ds, None, num_samples=num_samples, top_k=top_k,
+                 steps=steps, batch=batch)
+    guarded = _make(train_ds, armed, num_samples=num_samples, top_k=top_k,
+                    steps=steps, batch=batch)
+
+    bare_us = _median_step_us(bare, steps)
+    guarded_us = _median_step_us(guarded, steps)
+    overhead_pct = (guarded_us - bare_us) / bare_us * 100.0
+
+    # the no-op guarantee at benchmark scale: same seed, same data, no
+    # fault fired -> bitwise-identical parameters
+    bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+            jax.tree.leaves(bare.params), jax.tree.leaves(guarded.params)
+        )
+    )
+
+    shape = f"P={items};S={num_samples};K={top_k};B={batch};steps={steps}"
+    emit("guard_step_unguarded", bare_us, shape)
+    emit("guard_step_guarded", guarded_us, shape)
+    emit(
+        "guard_accept", 0.0,
+        f"overhead_pct={overhead_pct:.2f};budget_pct={OVERHEAD_BUDGET_PCT};"
+        f"bitwise_identical={int(bitwise)};"
+        f"GUARD_OK={int(bitwise and overhead_pct < OVERHEAD_BUDGET_PCT)}",
+    )
+    assert bitwise, "guarded trainer diverged from unguarded with no fault"
+    assert overhead_pct < OVERHEAD_BUDGET_PCT, (
+        f"guard overhead {overhead_pct:.2f}% over the "
+        f"{OVERHEAD_BUDGET_PCT}% budget "
+        f"(unguarded {bare_us:.0f}us vs guarded {guarded_us:.0f}us)"
+    )
+    return {"overhead_pct": overhead_pct, "bitwise": bitwise}
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    from benchmarks.common import EMITTED, persist
+
+    EMITTED.clear()
+    t0 = time.time()
+    run(smoke=smoke)
+    if not smoke:  # CI smoke must not clobber the committed full artifact
+        persist("guard", list(EMITTED), time.time() - t0)
+
+
+if __name__ == "__main__":
+    main()

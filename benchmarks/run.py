@@ -21,6 +21,7 @@ from benchmarks import (
     dist_step,
     fused_step,
     grad_quality,
+    guard_overhead,
     index_maintenance,
     kernel_bench,
     retrieval,
@@ -44,6 +45,7 @@ SUITES = {
     "dist_step": dist_step.run,  # multi-device step (subprocess 4-dev mesh)
     "retrieval": retrieval.run,  # MIPS probe routes incl. the IVF kernel
     "index": index_maintenance.run,  # incremental IVF maintenance vs rebuild
+    "guard": guard_overhead.run,  # guarded-step overhead + bitwise parity
     "roofline": roofline.run,
 }
 

@@ -121,6 +121,12 @@ def fopo_loss(
     ([B, Sp] with Sp a multiple of the sample tile, padded tail
     pre-masked) so the fused covariance kernels consume them with a
     no-op pad — dead slots carry exactly zero weight everywhere.
+
+    Returns ``(loss, aux)`` where aux is the `snis_diagnostics` dict —
+    the `repro.core.snis.DIAGNOSTIC_KEYS` contract (``ess`` / ``rbar``
+    / ``max_wbar``) every path (unfused, fused, dist) honours: the
+    trainer logs them into history and the health guard's
+    ESS/weight-collapse verdicts key on them.
     """
     if plan is None:
         plan = ExecutionPlan.resolve(cfg, retriever=retriever)

@@ -130,8 +130,6 @@ def _validate(cfg: FOPOConfig, *, injected_retriever: bool, retriever_kwargs: di
         raise ValueError(f"num_samples must be >= 1, got {cfg.num_samples}")
     if cfg.top_k < 1:
         raise ValueError(f"top_k must be >= 1, got {cfg.top_k}")
-    if isinstance(cfg.epsilon, (int, float)) and not 0.0 <= cfg.epsilon <= 1.0:
-        raise ValueError(f"epsilon must lie in [0, 1], got {cfg.epsilon}")
     if cfg.dist is not None:
         from repro.dist.fopo import DistConfig
 
@@ -140,6 +138,8 @@ def _validate(cfg: FOPOConfig, *, injected_retriever: bool, retriever_kwargs: di
                 f"FOPOConfig.dist must be a DistConfig (or None), got "
                 f"{type(cfg.dist).__name__}"
             )
+    if isinstance(cfg.epsilon, (int, float)) and not 0.0 <= cfg.epsilon <= 1.0:
+        raise ValueError(f"epsilon must lie in [0, 1], got {cfg.epsilon}")
     if not injected_retriever and cfg.retriever not in RETRIEVERS:
         # typo guard fires under dist too — a misspelt retriever must
         # never silently fall back to the sharded exact scan
@@ -280,6 +280,31 @@ class ExecutionPlan:
     # it updates; the trainer owns the state and its refresh cadence).
     refresh: RefreshConfig | None = None
     initial_index_state: RefreshState | None = None
+    # the degradation ladder's last rung (repro.health.index_health):
+    # a pre-resolved EXACT retriever with the refresh path's
+    # (h, beta, state) signature — resolved at construction so the
+    # decision to degrade never constructs anything new, it just swaps
+    # which resolved retriever the step closes over. None when the plan
+    # has no refresh path (the ladder only exists for maintained
+    # indexes).
+    fallback_retriever: Retriever | None = None
+    degraded: bool = False  # True once degrade_to_fallback() was taken
+
+    def degrade_to_fallback(self) -> "ExecutionPlan":
+        """The ladder's terminal action: a new frozen plan whose
+        retriever is the pre-resolved exact fallback (same operand
+        signature — the trainer rebuilds its jitted step against the
+        new plan, with every operand unchanged). Idempotent."""
+        if self.degraded:
+            return self
+        if self.fallback_retriever is None:
+            raise ValueError(
+                "plan has no fallback retriever (only refresh plans "
+                "resolve one — nothing to degrade to)"
+            )
+        return dataclasses.replace(
+            self, retriever=self.fallback_retriever, degraded=True
+        )
 
     # ------------------------------------------------------------------
     @classmethod
@@ -314,6 +339,12 @@ class ExecutionPlan:
         # consumers of plan.cfg see what actually runs
         if tile != cfg.sample_tile:
             cfg = dataclasses.replace(cfg, sample_tile=tile)
+        if cfg.top_k > cfg.num_items:
+            # same clamp-and-write-back rule as sample_tile: the default
+            # top_k=256 on a tiny catalog must not reach the retriever as
+            # an out-of-range K (lax.top_k would trace-fail; masked paths
+            # would emit garbage ids)
+            cfg = dataclasses.replace(cfg, top_k=cfg.num_items)
         if uses_kernels and cfg.fused_interpret is None:
             cfg = dataclasses.replace(cfg, fused_interpret=interpret)
         if retriever is None and cfg.retriever in _PALLAS_RETRIEVERS:
@@ -324,6 +355,7 @@ class ExecutionPlan:
             kw.setdefault("interpret", interpret)
         refresh = cfg.index_refresh
         initial_state = None
+        fallback = None
         if refresh is not None:
             # incremental maintenance: the index becomes a RefreshState
             # OPERAND of the retriever — (h, beta, state) — instead of a
@@ -335,17 +367,26 @@ class ExecutionPlan:
 
             index, n_probe, cap_tile = _resolve_ivf_pallas_kwargs(kw)
             r_interp, top_k = kw["interpret"], cfg.top_k
+            num_items = cfg.num_items
             if cfg.dist is None:
+                from repro.mips.exact import topk_exact
+
                 initial_state = refresh_mod.init_refresh_state(
                     index, cfg.num_items, refresh.delta_cap
                 )
                 retriever = lambda h, beta, state: ivf_ops.ivf_topk(  # noqa: E731
-                    h, state.as_index(cfg.num_items), top_k,
+                    h, state.as_index(num_items), top_k,
                     n_probe=n_probe, cap_tile=cap_tile, interpret=r_interp,
                     delta=state.delta(),
                 )
+                # the ladder's exact fallback, with the refresh-route
+                # signature (state rides along unused so the step body
+                # never changes shape when degrading)
+                fallback = lambda h, beta, state: topk_exact(  # noqa: E731
+                    h, beta, top_k
+                )
             else:
-                from repro.dist.fopo import dist_ivf_topk
+                from repro.dist.fopo import dist_ivf_topk, dist_sharded_topk
 
                 dist_cfg = cfg.dist
                 initial_state = refresh_mod.init_refresh_sharded(
@@ -355,6 +396,9 @@ class ExecutionPlan:
                     h, refresh_mod.sharded_as_index(state, cfg.num_items),
                     top_k, dist_cfg, n_probe=n_probe, cap_tile=cap_tile,
                     interpret=r_interp, delta=state.delta(),
+                )
+                fallback = lambda h, beta, state: dist_sharded_topk(  # noqa: E731
+                    h, beta, top_k, dist_cfg, num_items=num_items
                 )
         elif retriever is None and cfg.dist is None:
             retriever = make_retriever(cfg, **kw)
@@ -380,6 +424,7 @@ class ExecutionPlan:
             retriever=retriever,
             refresh=refresh,
             initial_index_state=initial_state,
+            fallback_retriever=fallback,
         )
 
     # ------------------------------------------------------------------

@@ -62,11 +62,20 @@ def snis_expectation(wbar: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(wbar[..., None] * values, axis=-2)
 
 
+# THE aux-dict contract of snis_diagnostics — every estimator path
+# (unfused, fused, dist) returns these keys, the trainer logs them into
+# history, and the health guard's ESS/weight-collapse checks key on
+# them. One tuple so producers and consumers cannot drift.
+DIAGNOSTIC_KEYS = ("ess", "rbar", "max_wbar")
+
+
 def snis_diagnostics(wbar: jnp.ndarray, rewards: jnp.ndarray) -> dict:
     """Batch-mean monitoring scalars shared by the jnp and fused paths:
     ESS, SNIS reward estimate rbar, and the max normalised weight (a
     weight-collapse alarm). Inputs are [B, S]. Fully-masked rows (all
-    weights zero) contribute ESS 0 rather than poisoning the mean."""
+    weights zero) contribute ESS 0 rather than poisoning the mean.
+    Keys are `DIAGNOSTIC_KEYS` — the aux contract the trainer history
+    and the health guard consume."""
     return {
         "ess": jnp.mean(effective_sample_size(wbar)),
         "rbar": jnp.mean(jnp.sum(wbar * rewards, axis=-1)),

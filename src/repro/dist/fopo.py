@@ -544,3 +544,27 @@ def dist_fopo_loss(
 
     plan = ExecutionPlan.resolve(cfg, retriever=retriever)
     return plan.execute(policy, params, key, x, beta, reward_fn, epsilon=epsilon)
+
+
+def dist_verdict_agree(verdict: jnp.ndarray, dist: DistConfig) -> jnp.ndarray:
+    """Mesh agreement on a health verdict ([] int32 bitmask, replicated
+    in): pmax over BOTH mesh axes, so if ANY shard saw a bad step every
+    shard sees a nonzero verdict and takes the identical skip branch —
+    sharded params can never diverge on a guarded step. pmax rather
+    than the issue's psum: summing bitmasks aliases bits (2x ESS_COLLAPSE
+    reads as GRAD_SPIKE|NONFINITE_*); pmax keeps a meaningful bitmask
+    whenever the shards agree on WHICH check fired and guarantees
+    any-bad -> all-bad always, which is the property the guard needs.
+    Cheap enough to leave on: one scalar all-reduce per step."""
+
+    def agree(v):
+        v = jax.lax.pmax(v, dist.data_axis)
+        return jax.lax.pmax(v, dist.model_axis)
+
+    return shard_map(
+        agree,
+        mesh=dist.mesh,
+        in_specs=P(),
+        out_specs=P(),
+        check_vma=False,
+    )(verdict)

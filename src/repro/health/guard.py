@@ -1,0 +1,301 @@
+"""In-graph health verdicts + skip-step recovery for the train step.
+
+The guarded step closes the detect -> decide -> recover loop WITHOUT
+leaving the device: the verdict (a bitmask of NaN/Inf, grad-spike,
+ESS-floor and weight-collapse checks over the loss, gradients and SNIS
+diagnostics) and the recovery decision (pass params/opt_state through
+unchanged on a bad step) are both computed in-graph, so the hot path
+stays one trace with zero host syncs. The trainer reads the verdict
+asynchronously AFTER the step result is already blocked on (free on the
+step-time clock) and escalates to a checkpoint rollback only once
+`max_consecutive_bad` bad steps pile up in a row.
+
+Recovery is keyed on the verdict in-graph: `jax.lax.cond(verdict == 0,
+update_fn, pass_through)`, so when no check fires the guard is a
+bitwise no-op — guarded and unguarded trainers produce IDENTICAL
+trajectories (asserted by tests/test_health.py, benchmarked by
+benchmarks/guard_overhead.py). A `lax.cond` rather than the more
+obvious `jax.tree.map` + `jnp.where` select, deliberately: XLA strips
+`optimization_barrier` fences before fusion on CPU and then sinks the
+optimizer-update arithmetic INTO the select fusion, recomputing it
+with different FMA contraction — a 1-ULP drift vs the unguarded
+program that breaks the bitwise guarantee. A conditional's branches
+are separate HLO computations, and fusion/duplication cannot cross a
+computation boundary, so the update inside the true branch compiles
+exactly as it does unguarded (and a skipped step doesn't even pay for
+the update). Under `dist=` the verdict is reduced across the mesh
+first (`repro.dist.fopo.dist_verdict_agree`), so every shard takes
+the same branch and sharded params can never diverge on a guarded
+step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:
+    from repro.health.index_health import IndexHealthConfig
+
+__all__ = [
+    "ESS_COLLAPSE",
+    "GRAD_SPIKE",
+    "GuardState",
+    "HealthConfig",
+    "NONFINITE_GRADS",
+    "NONFINITE_LOSS",
+    "VERDICT_NAMES",
+    "WBAR_COLLAPSE",
+    "decode_verdict",
+    "grad_global_norm",
+    "guarded_update",
+    "health_verdict",
+    "init_guard_state",
+    "update_guard_state",
+]
+
+# verdict bitmask — one bit per in-graph check, OR'd into an int32 scalar
+NONFINITE_LOSS = 1 << 0  # loss is NaN/Inf
+NONFINITE_GRADS = 1 << 1  # any grad leaf is NaN/Inf (via the global norm)
+GRAD_SPIKE = 1 << 2  # grad norm > spike_factor x the EMA baseline
+ESS_COLLAPSE = 1 << 3  # batch-mean SNIS ESS under the floor
+WBAR_COLLAPSE = 1 << 4  # batch-mean max normalised weight near 1
+
+VERDICT_NAMES = {
+    NONFINITE_LOSS: "nonfinite_loss",
+    NONFINITE_GRADS: "nonfinite_grads",
+    GRAD_SPIKE: "grad_spike",
+    ESS_COLLAPSE: "ess_collapse",
+    WBAR_COLLAPSE: "wbar_collapse",
+}
+
+
+def decode_verdict(verdict: int) -> list[str]:
+    """Host-side: the named checks a verdict bitmask fired (log lines)."""
+    return [name for bit, name in VERDICT_NAMES.items() if verdict & bit]
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Knobs of the guarded train step (repro.train.FOPOTrainer).
+
+    NaN/Inf detection in the loss and gradients is always on; the other
+    checks are opt-in via their thresholds:
+
+    ess_floor            flag a step whose batch-mean SNIS effective
+                         sample size falls below this (proposal/policy
+                         mismatch — the weights carry no information).
+                         0 disables.
+    max_wbar_ceiling     flag a step whose batch-mean max normalised
+                         SNIS weight exceeds this (one draw dominates —
+                         the covariance gradient is pure noise). 1.0
+                         disables.
+    grad_spike_factor    flag a step whose global grad norm exceeds
+                         factor x an EMA baseline of past good steps.
+                         0 disables; must be > 1 otherwise.
+    ema_decay            decay of that grad-norm EMA (good steps only,
+                         so a NaN/spike never poisons the baseline).
+    warmup_steps         good steps folded into the EMA before the
+                         spike check arms.
+    max_consecutive_bad  bad steps in a row before the trainer rolls
+                         back to the last good snapshot/checkpoint with
+                         a re-split RNG key.
+    snapshot_every       cadence (in good steps) of the trainer's
+                         in-memory last-good snapshot (params/opt state/
+                         loader/index/RNG keys — device references, no
+                         copies or host syncs).
+    save_retries         transient checkpoint-save failures retried
+                         with exponential backoff before raising.
+    save_backoff         base backoff (seconds) between save retries.
+    index                optional `IndexHealthConfig`: the retrieval
+                         degradation ladder (overflow watch + sampled
+                         recall probe -> compact -> rebuild -> exact
+                         fallback). None disables index probing.
+    """
+
+    ess_floor: float = 0.0
+    max_wbar_ceiling: float = 1.0
+    grad_spike_factor: float = 0.0
+    ema_decay: float = 0.99
+    warmup_steps: int = 5
+    max_consecutive_bad: int = 3
+    snapshot_every: int = 10
+    save_retries: int = 2
+    save_backoff: float = 0.05
+    index: "IndexHealthConfig | None" = None
+
+    def __post_init__(self):
+        if self.ess_floor < 0:
+            raise ValueError(f"ess_floor must be >= 0, got {self.ess_floor}")
+        if not 0.0 < self.max_wbar_ceiling <= 1.0:
+            raise ValueError(
+                f"max_wbar_ceiling must lie in (0, 1], got {self.max_wbar_ceiling}"
+            )
+        if self.grad_spike_factor and self.grad_spike_factor <= 1.0:
+            raise ValueError(
+                "grad_spike_factor must be > 1 (or 0 to disable), got "
+                f"{self.grad_spike_factor}"
+            )
+        if not 0.0 < self.ema_decay < 1.0:
+            raise ValueError(f"ema_decay must lie in (0, 1), got {self.ema_decay}")
+        if self.max_consecutive_bad < 1:
+            raise ValueError(
+                f"max_consecutive_bad must be >= 1, got {self.max_consecutive_bad}"
+            )
+        if self.snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {self.snapshot_every}"
+            )
+        if self.save_retries < 0:
+            raise ValueError(f"save_retries must be >= 0, got {self.save_retries}")
+
+
+class GuardState(NamedTuple):
+    """Pure-array guard state — rides the jitted step as an operand (one
+    trace, no host syncs) and the checkpoint as ordinary leaves."""
+
+    grad_ema: jnp.ndarray  # [] f32 EMA of the grad norm over GOOD steps
+    good_steps: jnp.ndarray  # [] i32 good steps folded into the EMA
+    consecutive_bad: jnp.ndarray  # [] i32 current bad-step run length
+    bad_total: jnp.ndarray  # [] i32 bad steps over the trainer lifetime
+    last_verdict: jnp.ndarray  # [] i32 bitmask of the latest step
+
+
+def init_guard_state() -> GuardState:
+    z32 = jnp.zeros((), jnp.int32)
+    return GuardState(
+        grad_ema=jnp.zeros((), jnp.float32),
+        good_steps=z32,
+        consecutive_bad=z32,
+        bad_total=z32,
+        last_verdict=z32,
+    )
+
+
+def grad_global_norm(grads: Any) -> jnp.ndarray:
+    """Global L2 norm over a grad pytree (f32 accumulate). A NaN/Inf in
+    ANY leaf surfaces as a non-finite norm — one reduction doubles as
+    the finiteness probe and the spike signal."""
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+
+
+def health_verdict(
+    cfg: HealthConfig,
+    loss: jnp.ndarray,
+    gnorm: jnp.ndarray,
+    aux: dict,
+    state: GuardState,
+) -> jnp.ndarray:
+    """The in-graph verdict, a [] int32 bitmask.
+
+    Which checks exist is static (resolved from cfg + aux keys at trace
+    time); whether they fire is data. ``gnorm`` is the global grad norm
+    (`grad_global_norm`) — the caller computes it so the guard never
+    consumes the grad tree itself (see `guarded_update` on why). A
+    NaN/Inf in any grad leaf surfaces as a non-finite norm, so the one
+    scalar doubles as the finiteness probe and the spike signal. `aux`
+    is the step's diagnostics dict — the SNIS checks key on the
+    `snis_diagnostics` contract (`ess` / `max_wbar`) and simply don't
+    trace for estimators that don't report them."""
+    bits = jnp.where(
+        jnp.isfinite(loss), 0, NONFINITE_LOSS
+    ).astype(jnp.int32)
+    bits = bits | jnp.where(jnp.isfinite(gnorm), 0, NONFINITE_GRADS)
+    if cfg.grad_spike_factor > 0:
+        armed = state.good_steps >= cfg.warmup_steps
+        spike = (
+            armed
+            & jnp.isfinite(gnorm)
+            & (gnorm > cfg.grad_spike_factor * state.grad_ema)
+        )
+        bits = bits | jnp.where(spike, GRAD_SPIKE, 0)
+    if cfg.ess_floor > 0 and "ess" in aux:
+        bits = bits | jnp.where(aux["ess"] < cfg.ess_floor, ESS_COLLAPSE, 0)
+    if cfg.max_wbar_ceiling < 1.0 and "max_wbar" in aux:
+        bits = bits | jnp.where(
+            aux["max_wbar"] > cfg.max_wbar_ceiling, WBAR_COLLAPSE, 0
+        )
+    return bits
+
+
+def update_guard_state(
+    cfg: HealthConfig,
+    state: GuardState,
+    verdict: jnp.ndarray,
+    gnorm: jnp.ndarray,
+) -> GuardState:
+    """Scalar-only guard bookkeeping: the grad-norm EMA folds in good
+    steps only (a skipped step never poisons the baseline), and the
+    bad-run counters drive the trainer's rollback escalation."""
+    ok = verdict == 0
+    safe_g = jnp.where(jnp.isfinite(gnorm), gnorm, 0.0)
+    warm = state.good_steps > 0
+    ema = jnp.where(
+        ok,
+        jnp.where(
+            warm,
+            cfg.ema_decay * state.grad_ema + (1.0 - cfg.ema_decay) * safe_g,
+            safe_g,
+        ),
+        state.grad_ema,
+    )
+    ok32 = ok.astype(jnp.int32)
+    return GuardState(
+        grad_ema=ema,
+        good_steps=state.good_steps + ok32,
+        consecutive_bad=jnp.where(ok, 0, state.consecutive_bad + 1),
+        bad_total=state.bad_total + (1 - ok32),
+        last_verdict=verdict,
+    )
+
+
+def guarded_update(
+    cfg: HealthConfig,
+    state: GuardState,
+    loss: jnp.ndarray,
+    gnorm: jnp.ndarray,
+    aux: dict,
+    params: Any,
+    opt_state: Any,
+    update_fn: Any,
+    *,
+    dist=None,
+) -> tuple[Any, Any, GuardState, jnp.ndarray]:
+    """verdict + (mesh agreement) + conditional update, as one
+    step-body call. Returns (params, opt_state, guard_state, verdict).
+
+    ``update_fn(params, opt_state) -> (new_params, new_opt_state)`` is
+    the optimizer apply (it may close over grads); it runs inside the
+    `lax.cond` true branch, pass-through is the false branch.
+
+    Bitwise-no-op contract: the guard must add ZERO consumers to the
+    backward/optimizer subgraphs, or XLA re-fuses them (a value with an
+    extra consumer materializes instead of fusing, and cheap elementwise
+    chains get DUPLICATED into the new consumer with different FMA
+    contraction — 1-ULP drift vs the unguarded program; XLA strips
+    `optimization_barrier` fences before fusion on CPU, so they cannot
+    pin this). Hence the shape of this API: the caller computes
+    `grad_global_norm` itself IN BOTH PROGRAMS (and returns it, so the
+    unguarded one doesn't DCE it away), the verdict consumes only that
+    scalar + loss + aux scalars, and the update runs inside a
+    conditional — a separate HLO computation fusion cannot reach into —
+    so it compiles exactly as it does unguarded."""
+    verdict = health_verdict(cfg, loss, gnorm, aux, state)
+    if dist is not None:
+        from repro.dist.fopo import dist_verdict_agree
+
+        verdict = dist_verdict_agree(verdict, dist)
+    out_params, out_opt = jax.lax.cond(
+        verdict == 0,
+        update_fn,
+        lambda p, o: (p, o),
+        params,
+        opt_state,
+    )
+    new_state = update_guard_state(cfg, state, verdict, gnorm)
+    return out_params, out_opt, new_state, verdict

@@ -43,7 +43,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.mips.exact import TopK, merge_topk
+from repro.mips.exact import TopK, merge_topk, recall_at_k, topk_exact
 from repro.mips.ivf import (
     DEFAULT_N_PROBE,
     IVFIndex,
@@ -519,6 +519,101 @@ def sharded_as_index(state: RefreshState, num_items: int) -> ShardedIVFIndex:
 
 
 # ---------------------------------------------------------------------------
+# health probes + rebuild (the degradation ladder's heavy rungs)
+# ---------------------------------------------------------------------------
+
+def sampled_recall(
+    state: RefreshState,
+    items: jnp.ndarray,  # [P, L] the CURRENT (full) embedding table
+    queries: jnp.ndarray,  # [B, L] held probe set
+    k: int,
+    *,
+    n_probe: int = DEFAULT_N_PROBE,
+) -> float:
+    """Host-side recall@k of the maintained index (main lists + delta
+    buffers, `refresh_query`) against exact top-k over `items` on a held
+    probe set — the periodic health probe of the retrieval degradation
+    ladder (`repro.health.index_health`). Handles both a single state
+    and the stacked sharded layout (per-shard probes merged through the
+    shared `merge_topk`, ids already GLOBAL)."""
+    exact = topk_exact(queries, items, k)
+    if state.centroids.ndim == 3:  # stacked [n, ...] sharded state
+        per = jax.vmap(
+            lambda st: refresh_query(st, queries, k, n_probe)
+        )(state)  # TopK with [n, B, k] fields
+        b = queries.shape[0]
+        approx = merge_topk(
+            jnp.moveaxis(per.scores, 0, 1).reshape(b, -1),
+            jnp.moveaxis(per.indices, 0, 1).reshape(b, -1),
+            k,
+        )
+    else:
+        approx = refresh_query(state, queries, k, n_probe)
+    return recall_at_k(approx, exact)
+
+
+def rebuild(
+    state: RefreshState,
+    items: jnp.ndarray,  # [rows, L] the CURRENT embedding table (local slab)
+    *,
+    iters: int = 4,
+    id_base: int = 0,
+    num_valid: int | None = None,
+) -> RefreshState:
+    """Full index rebuild, warm-started: `iters` Lloyd iterations over
+    the whole table from the CURRENT centroids (no re-seeding — the
+    maintained centroids are a better init than k-means++ from scratch,
+    and keeping the op jittable rules out the build's host-sync path),
+    then a `compact` re-bucket. The ladder's second rung: heals centroid
+    drift that a bare compaction (first rung) can't."""
+    c = state.num_clusters
+    rows = items.shape[0]
+    if num_valid is not None:  # traced under vmap — no concrete compare
+        w = (jnp.arange(rows) < num_valid).astype(items.dtype)
+    else:
+        w = jnp.ones((rows,), items.dtype)
+    cent = state.centroids
+    for _ in range(iters):
+        assign = assign_clusters(items, cent)
+        add = jax.ops.segment_sum(items * w[:, None], assign, c)
+        cnt = jax.ops.segment_sum(w, assign, c)
+        # empty clusters keep their centroid (stay available for drift)
+        cent = jnp.where(
+            cnt[:, None] > 0, add / jnp.maximum(cnt, 1.0)[:, None], cent
+        )
+    return compact(
+        state._replace(centroids=cent),
+        items,
+        id_base=id_base,
+        num_valid=num_valid,
+    )
+
+
+def rebuild_sharded(
+    state: RefreshState,  # stacked [n, ...]
+    items: jnp.ndarray,  # [P, L] full (replicated) table
+    *,
+    iters: int = 4,
+) -> RefreshState:
+    """Per-shard warm rebuild over each shard's row slab (global ids) —
+    same slab partition rule as `compact_sharded`."""
+    n = state.centroids.shape[0]
+    p, l = items.shape
+    rows = -(-p // n)
+    pad = n * rows - p
+    if pad:
+        items = jnp.concatenate([items, jnp.zeros((pad, l), items.dtype)])
+    slabs = items.reshape(n, rows, l)
+    bases = _shard_id_bases(n, rows)
+    valids = jnp.minimum(jnp.maximum(p - bases, 0), rows)
+    return jax.vmap(
+        lambda st, slab, base, nv: rebuild(
+            st, slab, iters=iters, id_base=base, num_valid=nv
+        )
+    )(state, slabs, bases, valids)
+
+
+# ---------------------------------------------------------------------------
 # convenience: build + wrap in one call
 # ---------------------------------------------------------------------------
 
@@ -572,8 +667,11 @@ __all__ = [
     "init_refresh_sharded",
     "init_refresh_state",
     "minibatch_kmeans_step",
+    "rebuild",
+    "rebuild_sharded",
     "refresh_query",
     "refresh_step",
     "refresh_step_sharded",
+    "sampled_recall",
     "sharded_as_index",
 ]

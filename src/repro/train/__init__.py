@@ -1,8 +1,10 @@
 from repro.train.checkpoint import (
+    CheckpointCorruptError,
     latest_checkpoint,
     list_checkpoints,
     restore_checkpoint,
     save_checkpoint,
+    set_write_fault,
 )
 from repro.train.trainer import FOPOTrainer, TrainerConfig
 
@@ -11,6 +13,8 @@ __all__ = [
     "restore_checkpoint",
     "latest_checkpoint",
     "list_checkpoints",
+    "CheckpointCorruptError",
+    "set_write_fault",
     "FOPOTrainer",
     "TrainerConfig",
 ]

@@ -30,13 +30,37 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any
+import time
+import zlib
+from typing import Any, Callable
 
 import jax
 import numpy as np
 
 MANIFEST = "manifest.json"
 ARRAYS = "arrays.npz"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification on restore: unreadable
+    archive, missing leaves, or a per-array checksum mismatch."""
+
+
+# test seam for fault injection (repro.health.faults): called with
+# (tmp_dir, attempt) after the files are written but BEFORE the atomic
+# rename — exactly where a real writer dies. Raising here must leave no
+# step dir behind and must be retryable.
+_WRITE_FAULT: Callable[[str, int], None] | None = None
+
+
+def set_write_fault(fn: Callable[[str, int], None] | None) -> None:
+    global _WRITE_FAULT
+    _WRITE_FAULT = fn
+
+
+def _leaf_checksum(arr: np.ndarray) -> int:
+    """crc32 over an array's raw bytes (contiguous view)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def _flatten_with_paths(tree: Any):
@@ -51,34 +75,63 @@ def save_checkpoint(
     *,
     extra: dict | None = None,
     keep: int = 3,
+    retries: int = 0,
+    backoff: float = 0.05,
 ) -> str:
-    """Atomically write `state` (a pytree of arrays/scalars) at `step`."""
+    """Atomically write `state` (a pytree of arrays/scalars) at `step`.
+
+    The manifest records a crc32 per leaf array; `restore_checkpoint`
+    verifies them, so corruption that slips past the atomic rename
+    (torn disk write, cosmic bitflip, admin with a hex editor) is caught
+    at read time instead of silently resuming garbage. Transient write
+    failures (OSError) are retried `retries` times with exponential
+    `backoff`; each attempt starts from a fresh temp dir, so a failed
+    attempt never leaves a partial step dir behind.
+    """
     os.makedirs(directory, exist_ok=True)
     flat, treedef = _flatten_with_paths(state)
     arrays = {}
+    checksums = []
     for i, leaf in enumerate(flat):
-        arrays[f"leaf_{i}"] = np.asarray(leaf)
+        arr = np.asarray(leaf)
+        arrays[f"leaf_{i}"] = arr
+        checksums.append(_leaf_checksum(arr))
     manifest = {
         "step": int(step),
         "treedef": str(treedef),  # structural fingerprint for validation
         "num_leaves": len(flat),
+        "checksums": checksums,
         "extra": extra or {},
     }
 
     final = os.path.join(directory, f"step_{step:010d}")
-    tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=directory)
-    try:
-        np.savez(os.path.join(tmp, ARRAYS), **arrays)
-        with open(os.path.join(tmp, MANIFEST), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
+    last_err: OSError | None = None
+    for attempt in range(retries + 1):
+        tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=directory)
+        try:
+            np.savez(os.path.join(tmp, ARRAYS), **arrays)
+            with open(os.path.join(tmp, MANIFEST), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if _WRITE_FAULT is not None:
+                _WRITE_FAULT(tmp, attempt)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except OSError as e:
+            shutil.rmtree(tmp, ignore_errors=True)
+            last_err = e
+            if attempt < retries:
+                time.sleep(backoff * (2**attempt))
+                continue
+            raise
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        break
+    else:  # pragma: no cover — loop always breaks or raises
+        raise last_err
     _rotate(directory, keep)
     return final
 
@@ -214,16 +267,10 @@ def restore_sharded(
     return out.astype(dtype, copy=False)
 
 
-def restore_checkpoint(
-    directory: str, template: Any, step: int | None = None
-) -> tuple[int, Any, dict]:
-    """Restore into the structure of `template` (same pytree, any mesh).
-    Returns (step, state, extra)."""
-    if step is None:
-        step = latest_checkpoint(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"step_{step:010d}")
+def _restore_one(path: str, template: Any) -> tuple[Any, dict]:
+    """Load + verify a single checkpoint dir. Raises
+    CheckpointCorruptError on any integrity failure (unreadable archive,
+    missing/short leaves, checksum mismatch)."""
     with open(os.path.join(path, MANIFEST)) as f:
         manifest = json.load(f)
     flat_t, treedef = jax.tree.flatten(template)
@@ -231,8 +278,20 @@ def restore_checkpoint(
         raise ValueError(
             f"checkpoint has {manifest['num_leaves']} leaves, template has {len(flat_t)}"
         )
-    with np.load(os.path.join(path, ARRAYS)) as z:
-        flat = [z[f"leaf_{i}"] for i in range(len(flat_t))]
+    checksums = manifest.get("checksums")
+    try:
+        with np.load(os.path.join(path, ARRAYS)) as z:
+            flat = [z[f"leaf_{i}"] for i in range(len(flat_t))]
+    except Exception as e:
+        raise CheckpointCorruptError(f"unreadable arrays in {path}: {e}") from e
+    if checksums is not None:  # pre-checksum checkpoints stay loadable
+        for i, arr in enumerate(flat):
+            got = _leaf_checksum(np.asarray(arr))
+            if got != checksums[i]:
+                raise CheckpointCorruptError(
+                    f"checksum mismatch on leaf_{i} in {path}: "
+                    f"{got:#010x} != {checksums[i]:#010x}"
+                )
     # cast scalars back to the template's dtypes where they were 0-d
     restored = []
     for saved, tmpl in zip(flat, flat_t):
@@ -240,5 +299,43 @@ def restore_checkpoint(
         if hasattr(tmpl, "dtype"):
             arr = arr.astype(tmpl.dtype)
         restored.append(arr)
-    state = jax.tree.unflatten(treedef, restored)
-    return step, state, manifest.get("extra", {})
+    return jax.tree.unflatten(treedef, restored), manifest.get("extra", {})
+
+
+def restore_checkpoint(
+    directory: str,
+    template: Any,
+    step: int | None = None,
+    *,
+    fallback: bool = False,
+) -> tuple[int, Any, dict]:
+    """Restore into the structure of `template` (same pytree, any mesh).
+    Returns (step, state, extra).
+
+    Every leaf is crc32-verified against the manifest. On corruption:
+    raises `CheckpointCorruptError`, or with `fallback=True` walks back
+    through older rotated checkpoints until one verifies (losing a few
+    steps beats resuming on garbage), raising only when every candidate
+    is corrupt.
+    """
+    if step is not None:
+        candidates = [step]
+    else:
+        candidates = sorted(list_checkpoints(directory), reverse=True)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        if not fallback:
+            candidates = candidates[:1]
+    errors = []
+    for s in candidates:
+        path = os.path.join(directory, f"step_{s:010d}")
+        try:
+            state, extra = _restore_one(path, template)
+            return s, state, extra
+        except CheckpointCorruptError as e:
+            if not fallback:
+                raise
+            errors.append(str(e))
+    raise CheckpointCorruptError(
+        "all candidate checkpoints corrupt:\n  " + "\n  ".join(errors)
+    )

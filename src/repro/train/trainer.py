@@ -6,12 +6,22 @@ optimizer, rotated checkpoints and restart-from-latest. The same driver
 runs the REINFORCE baseline (`estimator="reinforce"`) and the dense
 exact-gradient reference (`estimator="exact"`), which is how the RQ
 benchmarks compare methods under one roof.
+
+With `TrainerConfig.health` set the step runs guarded
+(`repro.health.guard`): in-graph verdicts over loss/grads/SNIS
+diagnostics, skip-step recovery via an in-graph select, checkpoint
+rollback after `max_consecutive_bad` bad steps, and (with
+`HealthConfig.index`) the retrieval degradation ladder — forced
+compaction -> warm rebuild -> plan-level exact fallback. A `FaultPlan`
+(`repro.health.faults`) can be injected for deterministic fault drills;
+its signals ride the step as operands, so arming a fault never
+retraces.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -23,11 +33,17 @@ from repro.core.plan import ExecutionPlan
 from repro.core.policy import SoftmaxPolicy, linear_tower_apply, linear_tower_init
 from repro.core.proposals import adaptive_epsilon
 from repro.core.rewards import make_session_reward
+from repro.core.snis import DIAGNOSTIC_KEYS
 from repro.data.loader import BatchLoader
+from repro.health.guard import grad_global_norm, init_guard_state
 from repro.data.synthetic import SessionDataset
 from repro.mips.exact import topk_exact
 from repro.optim.optimizers import Optimizer, adam, clip_by_global_norm
 from repro.train import checkpoint as ckpt
+
+if TYPE_CHECKING:
+    from repro.health.faults import FaultPlan
+    from repro.health.guard import HealthConfig
 
 
 @dataclasses.dataclass
@@ -46,6 +62,11 @@ class TrainerConfig:
     keep_checkpoints: int = 3
     eval_every: int = 0
     seed: int = 0
+    # robustness layer (repro.health): None runs the bare step — with a
+    # HealthConfig the step is guarded (verdict + in-graph skip), bad
+    # runs roll back to the last good snapshot, and HealthConfig.index
+    # arms the retrieval degradation ladder
+    health: "HealthConfig | None" = None
 
 
 class FOPOTrainer:
@@ -55,6 +76,7 @@ class FOPOTrainer:
         dataset: SessionDataset,
         *,
         retriever_kwargs: dict | None = None,
+        fault_plan: "FaultPlan | None" = None,
     ):
         self.cfg = cfg
         self.dataset = dataset
@@ -111,6 +133,23 @@ class FOPOTrainer:
         )
         self._refresh_fns = self._build_refresh() if self.index_state is not None else None
         self._refresh_key = jax.random.PRNGKey(cfg.seed + 31)
+        # the training RNG is OWNED (not a train()-local): it rides the
+        # checkpoint, so a killed-and-resumed run continues the exact
+        # key sequence of an uninterrupted one
+        self._train_key = jax.random.PRNGKey(cfg.seed + 17)
+        # --- robustness state (all None/zero when cfg.health is None) -
+        self.fault_plan = fault_plan
+        self.guard_state = None
+        self._snapshot: dict | None = None
+        self._restarts = 0  # rollbacks taken (folds into the re-split key)
+        self._degraded = False  # ladder's terminal rung taken
+        self._monitor = None
+        if cfg.health is not None:
+            self.guard_state = init_guard_state()
+            if cfg.health.index is not None:
+                from repro.health.index_health import IndexHealthMonitor
+
+                self._monitor = IndexHealthMonitor(cfg.health.index)
         self._train_step = self._build_step()
 
     # ------------------------------------------------------------------
@@ -118,6 +157,8 @@ class FOPOTrainer:
         cfg = self.cfg
         policy = self.policy
         optimizer = self.optimizer
+        health = cfg.health
+        guard_dist = cfg.fopo.dist if cfg.estimator == "fopo" else None
 
         # beta and index_state ride as OPERANDS, not closure captures:
         # `update_items` (catalog churn) and the async refresh ops
@@ -151,17 +192,60 @@ class FOPOTrainer:
                 return loss, {}
             raise ValueError(cfg.estimator)
 
+        # whether guard/fault code traces is STATIC (config presence);
+        # whether a check/fault fires is data — one trace either way
         @jax.jit
         def train_step(
-            params, opt_state, key, contexts, positives, eps, beta, index_state
+            params, opt_state, guard_state, key, contexts, positives, eps,
+            beta, index_state, fault,
         ):
             (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, key, contexts, positives, eps, beta, index_state
             )
-            if cfg.grad_clip > 0:
-                grads = clip_by_global_norm(grads, cfg.grad_clip)
-            params, opt_state = optimizer.update(grads, opt_state, params)
-            return params, opt_state, loss, aux
+            # The guard's bitwise-no-op guarantee needs the backward
+            # pass and the optimizer update to compile IDENTICALLY in
+            # the guarded and unguarded programs, so the guard may add
+            # ZERO consumers to either subgraph (an extra consumer
+            # makes XLA duplicate cheap elementwise chains into it with
+            # different FMA contraction — 1-ULP drift; optimization_
+            # barrier fences are stripped before fusion on CPU and
+            # cannot pin this). Hence:
+            #  - the grad-norm reduction runs IN BOTH programs and is
+            #    returned via aux["grad_norm"], so `grads` has the same
+            #    consumer set either way (the verdict reads the scalar,
+            #    never the grad tree);
+            #  - the clip + optimizer apply live in `do_update`, which
+            #    the guarded program runs inside a `lax.cond` branch —
+            #    a separate HLO computation fusion cannot reach into
+            #    (see repro.health.guard.guarded_update).
+            if fault is not None:
+                from repro.health.faults import inject_aux, inject_grads
+
+                grads = inject_grads(grads, fault)
+                aux = inject_aux(aux, fault)
+            gnorm = grad_global_norm(grads)
+            aux = dict(aux, grad_norm=gnorm)
+
+            def do_update(p, o):
+                g = grads
+                if cfg.grad_clip > 0:
+                    g = clip_by_global_norm(g, cfg.grad_clip)
+                return optimizer.update(g, o, p)
+
+            if guard_state is None:
+                new_params, new_opt_state = do_update(params, opt_state)
+                return (
+                    new_params, new_opt_state, None, loss, aux,
+                    jnp.zeros((), jnp.int32),
+                )
+            from repro.health.guard import guarded_update
+
+            out_params, out_opt, out_guard, verdict = guarded_update(
+                health, guard_state, loss, gnorm, aux,
+                params, opt_state, do_update,
+                dist=guard_dist,
+            )
+            return out_params, out_opt, out_guard, loss, aux, verdict
 
         return train_step
 
@@ -175,6 +259,12 @@ class FOPOTrainer:
 
         rc = self.plan.refresh
         p = self.cfg.fopo.num_items
+        health = self.cfg.health
+        iters = (
+            health.index.rebuild_iters
+            if health is not None and health.index is not None
+            else 4
+        )
         if self.cfg.fopo.dist is None:
             return {
                 "refresh": jax.jit(partial(
@@ -183,6 +273,7 @@ class FOPOTrainer:
                 )),
                 "append": jax.jit(partial(R.delta_append)),
                 "compact": jax.jit(partial(R.compact)),
+                "rebuild": jax.jit(partial(R.rebuild, iters=iters)),
             }
         return {
             "refresh": jax.jit(partial(
@@ -191,6 +282,7 @@ class FOPOTrainer:
             )),
             "append": jax.jit(partial(R.delta_append_sharded, num_items=p)),
             "compact": jax.jit(partial(R.compact_sharded)),
+            "rebuild": jax.jit(partial(R.rebuild_sharded, iters=iters)),
         }
 
     # ------------------------------------------------------------------
@@ -206,7 +298,7 @@ class FOPOTrainer:
         # never -1 (wraps) or a clamped 0 (would race a real row-0 write)
         idx = jnp.where(ids >= 0, ids, self.beta.shape[0])
         self.beta = self.beta.at[idx].set(embs, mode="drop")
-        if self._refresh_fns is not None:
+        if self._refresh_fns is not None and not self._degraded:
             self.index_state = self._refresh_fns["append"](
                 self.index_state, ids, embs
             )
@@ -216,7 +308,10 @@ class FOPOTrainer:
         maintenance WITHOUT blocking — JAX's async dispatch is the
         separate stream (the fused train step already in flight never
         waits on it; the next step consumes the new state through an
-        ordinary data dependency)."""
+        ordinary data dependency). A degraded trainer (exact fallback)
+        skips maintenance — the index is out of the serving path."""
+        if self._degraded:
+            return
         rc = self.plan.refresh
         done = self.step + 1  # steps completed incl. the one in flight
         if rc.every and done % rc.every == 0:
@@ -228,6 +323,269 @@ class FOPOTrainer:
             self.index_state = self._refresh_fns["compact"](
                 self.index_state, self.beta
             )
+
+    # ------------------------------------------------------------------
+    # the retrieval degradation ladder (repro.health.index_health)
+    # ------------------------------------------------------------------
+    def _maybe_probe_index(self, history: dict) -> None:
+        """Feed the ladder monitor and execute its escalations. Runs at
+        the probe cadence (host-side — the sampled recall probe blocks,
+        which is exactly why it is periodic, not per-step)."""
+        monitor = self._monitor
+        if monitor is None or self._degraded or self.index_state is None:
+            return
+        ih = monitor.cfg
+        cadence = ih.probe_every if ih.probe_every else 1
+        if self.step % cadence != 0:
+            return
+        recall = None
+        if ih.probe_every:
+            from repro.mips.ivf import DEFAULT_N_PROBE
+            from repro.mips.refresh import sampled_recall
+
+            rows = min(ih.probe_rows, len(self.dataset.contexts))
+            queries = self.policy.user_embedding(
+                self.params, jnp.asarray(self.dataset.contexts[:rows])
+            )
+            recall = sampled_recall(
+                self.index_state, self.beta, queries, ih.probe_k,
+                n_probe=ih.n_probe or DEFAULT_N_PROBE,
+            )
+        overflow = int(jnp.max(self.index_state.overflow))  # sharded: worst
+        action = monitor.observe(recall, overflow)
+        if recall is not None or action:
+            history["index_health"].append(
+                {"step": self.step, "recall": recall, "overflow": overflow,
+                 "action": action}
+            )
+        if action in ("compact", "rebuild"):
+            self.index_state = self._refresh_fns[action](
+                self.index_state, self.beta
+            )
+        elif action == "fallback":
+            self._degrade()
+
+    def _degrade(self) -> None:
+        """The ladder's last rung: swap the plan's retriever for its
+        pre-resolved exact fallback and rebuild the jitted step against
+        it (operands unchanged — index_state still rides, unused)."""
+        if self._degraded or self.plan is None:
+            return
+        self.plan = self.plan.degrade_to_fallback()
+        self.retriever = self.plan.retriever
+        self._degraded = True
+        self._train_step = self._build_step()
+
+    # ------------------------------------------------------------------
+    # snapshot / rollback (the guard's escalation path)
+    # ------------------------------------------------------------------
+    def _take_snapshot(self) -> None:
+        """In-memory last-good state: device-array REFERENCES (JAX
+        arrays are immutable — no copies, no host syncs)."""
+        self._snapshot = {
+            "step": self.step,
+            "state": self._ckpt_state(),
+            "loader": self.loader.state.to_dict(),
+        }
+
+    def _rollback(self) -> None:
+        """max_consecutive_bad exceeded: restore the last good snapshot
+        and RE-SPLIT the training key (replaying the same keys would
+        deterministically reproduce a data-dependent bad step; folding
+        in the restart count gives the replay a fresh stream)."""
+        self._restarts += 1
+        snap = self._snapshot
+        if snap is not None:
+            st = snap["state"]
+            self.params = st["params"]
+            self.opt_state = st["opt_state"]
+            self._refresh_key = st["refresh_key"]
+            if "index_state" in st:
+                self.index_state = st["index_state"]
+            self.step = snap["step"]
+            self.loader.state = self.loader.state.from_dict(snap["loader"])
+            base = st["train_key"]
+        else:
+            base = self._train_key
+        self._train_key = jax.random.fold_in(base, self._restarts)
+        self.guard_state = init_guard_state()
+
+    # ------------------------------------------------------------------
+    def _ckpt_state(self) -> dict:
+        """EVERYTHING resume needs, as one pytree: params, opt state,
+        the maintained index (RefreshState incl. its overflow counter),
+        the guard state, and both RNG keys — a restart resumes the
+        exact trajectory, not just the params."""
+        state: dict[str, Any] = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "train_key": self._train_key,
+            "refresh_key": self._refresh_key,
+        }
+        if self.index_state is not None:
+            state["index_state"] = self.index_state
+        if self.guard_state is not None:
+            state["guard_state"] = self.guard_state
+        return state
+
+    def _adopt_state(self, state: dict) -> None:
+        def as_jnp(x):
+            return jnp.asarray(x) if x is not None else None
+
+        self.params = jax.tree.map(as_jnp, state["params"])
+        self.opt_state = jax.tree.map(as_jnp, state["opt_state"])
+        self._train_key = jnp.asarray(state["train_key"])
+        self._refresh_key = jnp.asarray(state["refresh_key"])
+        if "index_state" in state:
+            self.index_state = jax.tree.map(as_jnp, state["index_state"])
+        if "guard_state" in state:
+            self.guard_state = jax.tree.map(as_jnp, state["guard_state"])
+
+    def maybe_restore(self) -> bool:
+        cfg = self.cfg
+        if not cfg.checkpoint_dir:
+            return False
+        latest = ckpt.latest_checkpoint(cfg.checkpoint_dir)
+        if latest is None:
+            return False
+        # fallback=True: a corrupt latest checkpoint (checksum mismatch,
+        # torn npz) walks back to the previous rotated one instead of
+        # resuming garbage or dying
+        step, state, extra = ckpt.restore_checkpoint(
+            cfg.checkpoint_dir, self._ckpt_state(), fallback=True
+        )
+        self._adopt_state(state)
+        self.step = step
+        if "loader" in extra:
+            self.loader.state = self.loader.state.from_dict(extra["loader"])
+        self._restarts = int(extra.get("restarts", 0))
+        if extra.get("degraded"):
+            self._degrade()
+        return True
+
+    def save(self) -> None:
+        cfg = self.cfg
+        if not cfg.checkpoint_dir:
+            return
+        health = cfg.health
+        ckpt.save_checkpoint(
+            cfg.checkpoint_dir,
+            self.step,
+            self._ckpt_state(),
+            extra={
+                "loader": self.loader.state.to_dict(),
+                "restarts": self._restarts,
+                "degraded": self._degraded,
+            },
+            keep=cfg.keep_checkpoints,
+            retries=health.save_retries if health is not None else 0,
+            backoff=health.save_backoff if health is not None else 0.05,
+        )
+
+    # ------------------------------------------------------------------
+    def train(self, num_steps: int | None = None, log_every: int = 0) -> dict:
+        cfg = self.cfg
+        health = cfg.health
+        n = num_steps if num_steps is not None else cfg.num_steps
+        history: dict[str, Any] = {
+            "loss": [], "reward": [], "step_time": [],
+            "ess": [], "rbar": [], "max_wbar": [],
+            "health": [], "events": [], "index_health": [],
+        }
+        if health is not None and self._snapshot is None:
+            self._take_snapshot()  # step-0 rollback target
+        t_total = time.perf_counter()
+        i = 0
+        while i < n:
+            i += 1
+            if self.fault_plan is not None:
+                self.fault_plan.maybe_kill(self.step)
+            batch = self.loader.next_batch()
+            self._train_key, sub = jax.random.split(self._train_key)
+            eps = adaptive_epsilon(self.step, cfg.num_steps) if cfg.adaptive_eps else 0.0
+            fault = (
+                self.fault_plan.signals(self.step)
+                if self.fault_plan is not None else None
+            )
+            t0 = time.perf_counter()
+            (
+                self.params, self.opt_state, self.guard_state, loss, aux,
+                verdict,
+            ) = self._train_step(
+                self.params,
+                self.opt_state,
+                self.guard_state,
+                sub,
+                self._place_batch(batch["contexts"]),
+                self._place_batch(batch["positives"]),
+                eps,
+                self.beta,
+                self.index_state,
+                fault,
+            )
+            if self._refresh_fns is not None:
+                # dispatched async while the step above is in flight —
+                # the step never blocks on maintenance (and vice versa)
+                self._maybe_refresh_index()
+            jax.block_until_ready(loss)
+            history["step_time"].append(time.perf_counter() - t0)
+            history["loss"].append(float(loss))
+            for k in DIAGNOSTIC_KEYS:
+                if k in aux:
+                    history[k].append(float(aux[k]))
+            self.step += 1
+            # the verdict is consumed HERE, after the step result is
+            # already on host — reading it adds no step-time sync
+            v = int(verdict) if health is not None else 0
+            if v:
+                from repro.health.guard import decode_verdict
+
+                history["health"].append(
+                    {"step": self.step, "verdict": v,
+                     "checks": decode_verdict(v)}
+                )
+                if int(self.guard_state.consecutive_bad) >= health.max_consecutive_bad:
+                    rolled_to = (
+                        self._snapshot["step"] if self._snapshot else self.step
+                    )
+                    self._rollback()
+                    history["events"].append(
+                        {"step": self.step, "event": "rollback",
+                         "to": rolled_to, "restarts": self._restarts}
+                    )
+                    if log_every:
+                        print(
+                            f"step {self.step}: ROLLBACK to {rolled_to} "
+                            f"(restart #{self._restarts})"
+                        )
+                    continue
+            elif (
+                health is not None
+                and self.step % health.snapshot_every == 0
+            ):
+                self._take_snapshot()
+            self._maybe_probe_index(history)
+            if cfg.checkpoint_every and self.step % cfg.checkpoint_every == 0:
+                self.save()
+            if cfg.eval_every and self.step % cfg.eval_every == 0:
+                history["reward"].append((self.step, self.evaluate()))
+            if log_every and self.step % log_every == 0:
+                msg = f"step {self.step}: loss={float(loss):+.5f}"
+                if "ess" in aux:
+                    msg += (
+                        f" ess={float(aux['ess']):.1f}"
+                        f" rbar={float(aux['rbar']):+.4f}"
+                        f" max_wbar={float(aux['max_wbar']):.3f}"
+                    )
+                if v:
+                    from repro.health.guard import decode_verdict
+
+                    msg += f" health={','.join(decode_verdict(v))}"
+                if self._degraded:
+                    msg += " [degraded:exact]"
+                print(msg)
+        history["total_time"] = time.perf_counter() - t_total
+        return history
 
     # ------------------------------------------------------------------
     def _place_batch(self, arr) -> jnp.ndarray:
@@ -242,79 +600,6 @@ class FOPOTrainer:
 
         spec = P(dist.data_axis, *(None,) * (arr.ndim - 1))
         return jax.device_put(arr, NamedSharding(dist.mesh, spec))
-
-    # ------------------------------------------------------------------
-    def maybe_restore(self) -> bool:
-        cfg = self.cfg
-        if not cfg.checkpoint_dir:
-            return False
-        latest = ckpt.latest_checkpoint(cfg.checkpoint_dir)
-        if latest is None:
-            return False
-        template = {
-            "params": self.params,
-            "opt_state": self.opt_state,
-        }
-        step, state, extra = ckpt.restore_checkpoint(cfg.checkpoint_dir, template)
-        self.params = jax.tree.map(jnp.asarray, state["params"])
-        self.opt_state = jax.tree.map(
-            lambda x: jnp.asarray(x) if x is not None else None, state["opt_state"]
-        )
-        self.step = step
-        if "loader" in extra:
-            self.loader.state = self.loader.state.from_dict(extra["loader"])
-        return True
-
-    def save(self) -> None:
-        cfg = self.cfg
-        if not cfg.checkpoint_dir:
-            return
-        ckpt.save_checkpoint(
-            cfg.checkpoint_dir,
-            self.step,
-            {"params": self.params, "opt_state": self.opt_state},
-            extra={"loader": self.loader.state.to_dict()},
-            keep=cfg.keep_checkpoints,
-        )
-
-    # ------------------------------------------------------------------
-    def train(self, num_steps: int | None = None, log_every: int = 0) -> dict:
-        cfg = self.cfg
-        n = num_steps if num_steps is not None else cfg.num_steps
-        key = jax.random.PRNGKey(cfg.seed + 17)
-        history = {"loss": [], "reward": [], "step_time": []}
-        t_total = time.perf_counter()
-        for i in range(n):
-            batch = self.loader.next_batch()
-            key, sub = jax.random.split(key)
-            eps = adaptive_epsilon(self.step, cfg.num_steps) if cfg.adaptive_eps else 0.0
-            t0 = time.perf_counter()
-            self.params, self.opt_state, loss, aux = self._train_step(
-                self.params,
-                self.opt_state,
-                sub,
-                self._place_batch(batch["contexts"]),
-                self._place_batch(batch["positives"]),
-                eps,
-                self.beta,
-                self.index_state,
-            )
-            if self._refresh_fns is not None:
-                # dispatched async while the step above is in flight —
-                # the step never blocks on maintenance (and vice versa)
-                self._maybe_refresh_index()
-            jax.block_until_ready(loss)
-            history["step_time"].append(time.perf_counter() - t0)
-            history["loss"].append(float(loss))
-            self.step += 1
-            if cfg.checkpoint_every and self.step % cfg.checkpoint_every == 0:
-                self.save()
-            if cfg.eval_every and self.step % cfg.eval_every == 0:
-                history["reward"].append((self.step, self.evaluate()))
-            if log_every and self.step % log_every == 0:
-                print(f"step {self.step}: loss={float(loss):+.5f}")
-        history["total_time"] = time.perf_counter() - t_total
-        return history
 
     # ------------------------------------------------------------------
     def evaluate(self, dataset: SessionDataset | None = None, max_rows: int = 4096) -> float:

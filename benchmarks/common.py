@@ -95,10 +95,41 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def env_block() -> dict:
+    """The reproducibility stamp every BENCH artifact carries: numbers
+    without the stack/hardware/commit that produced them can't be
+    compared across runs."""
+    import platform
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:
+        sha = None
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "host_count": jax.process_count(),
+        "python": platform.python_version(),
+        "git_sha": sha,
+    }
+
+
 def persist(name: str, rows: list[dict], wall_s: float) -> None:
     """Write a suite's rows to results/BENCH_<name>.json (benchmarks.run
-    calls this for every suite; standalone suite mains call it too)."""
+    calls this for every suite; standalone suite mains call it too),
+    stamped with the environment that produced them."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump({"suite": name, "wall_s": wall_s, "rows": rows}, f, indent=2)
+        json.dump(
+            {"suite": name, "wall_s": wall_s, "env": env_block(), "rows": rows},
+            f, indent=2,
+        )

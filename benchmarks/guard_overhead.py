@@ -11,9 +11,21 @@ guarantee at benchmark scale, not just at test scale.
 
     PYTHONPATH=src python -m benchmarks.guard_overhead           # full
     PYTHONPATH=src python -m benchmarks.guard_overhead --smoke   # CI gate
+
+`--obs` runs the sibling suite for the telemetry spine (repro.obs):
+the SAME guarded trainer with the full obs stack armed (JSONL sink,
+Chrome tracer, drift monitor) vs obs-off, gated under the same 5%
+budget with the same bitwise-params witness — telemetry must observe
+the run, never perturb it. It also leaves a complete artifact set
+behind (metrics.jsonl, trace.json, report.md with a health event and a
+drift series) under results/obs_run (full) or results/obs_smoke (CI,
+uploaded as a workflow artifact), and writes results/BENCH_obs.json
+in full mode.
 """
 from __future__ import annotations
 
+import os
+import shutil
 import statistics
 import sys
 import time
@@ -21,7 +33,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, twitch_small
+from benchmarks.common import RESULTS_DIR, emit, twitch_small
 from repro.core import FOPOConfig
 from repro.health import HealthConfig
 from repro.train import FOPOTrainer, TrainerConfig
@@ -29,7 +41,8 @@ from repro.train import FOPOTrainer, TrainerConfig
 OVERHEAD_BUDGET_PCT = 5.0
 
 
-def _make(train_ds, health, *, num_samples, top_k, steps, batch):
+def _make(train_ds, health, *, num_samples, top_k, steps, batch, obs=None,
+          fault=None, seed=0):
     p = train_ds.item_embeddings.shape[0]
     fopo = FOPOConfig(
         num_items=p, num_samples=num_samples, top_k=min(top_k, p),
@@ -38,9 +51,9 @@ def _make(train_ds, health, *, num_samples, top_k, steps, batch):
     cfg = TrainerConfig(
         estimator="fopo", fopo=fopo, batch_size=batch,
         learning_rate=3e-3, num_steps=steps, checkpoint_every=0,
-        seed=0, health=health,
+        seed=seed, health=health, obs=obs,
     )
-    return FOPOTrainer(cfg, train_ds)
+    return FOPOTrainer(cfg, train_ds, fault_plan=fault)
 
 
 def _median_step_us(trainer, steps) -> float:
@@ -95,15 +108,93 @@ def run(smoke: bool = False) -> dict:
     return {"overhead_pct": overhead_pct, "bitwise": bitwise}
 
 
+def run_obs(smoke: bool = False) -> dict:
+    """Telemetry overhead + artifact check: guarded trainer with the
+    full obs stack on vs off, then a short fault-drilled run so the
+    rendered report provably contains a health event and a drift
+    series. Artifacts land in results/obs_run (full) or
+    results/obs_smoke (CI uploads them)."""
+    from repro.health.faults import FaultPlan
+    from repro.obs import ObsConfig
+    from repro.obs.drift import DriftConfig
+    from repro.obs.report import render_run
+
+    if smoke:
+        embed, items, num_samples, top_k, steps, batch = 16, 2000, 128, 64, 12, 16
+    else:
+        embed, items, num_samples, top_k, steps, batch = 32, 10_000, 1000, 256, 40, 32
+    train_ds, _ = twitch_small(embed_dim=embed, num_items=items)
+    armed = HealthConfig(
+        ess_floor=1.0, grad_spike_factor=100.0, max_wbar_ceiling=0.999,
+    )
+    shape = dict(num_samples=num_samples, top_k=top_k, steps=steps, batch=batch)
+
+    run_dir = os.path.normpath(
+        os.path.join(RESULTS_DIR, "obs_smoke" if smoke else "obs_run")
+    )
+    shutil.rmtree(run_dir, ignore_errors=True)
+    obs_cfg = ObsConfig(run_dir=run_dir, drift=DriftConfig(calibration_steps=3))
+
+    base = _make(train_ds, armed, **shape)  # the PR-7 baseline: obs off
+    instrumented = _make(train_ds, armed, obs=obs_cfg, **shape)
+    base_us = _median_step_us(base, steps)
+    obs_us = _median_step_us(instrumented, steps)
+    overhead_pct = (obs_us - base_us) / base_us * 100.0
+
+    # telemetry observes, never perturbs: bitwise-identical params
+    bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+            jax.tree.leaves(base.params), jax.tree.leaves(instrumented.params)
+        )
+    )
+
+    # artifact leg: one short run with a scripted ESS collapse appends a
+    # guaranteed health event to the same stream, then render the report
+    drill = _make(
+        train_ds, armed, obs=obs_cfg,
+        fault=FaultPlan(ess_collapse_at=(2,), ess_value=0.5), **shape,
+    )
+    drill.train(6, log_every=2)
+    report = open(render_run(run_dir)).read()
+    report_ok = (
+        "| ess |" in report  # step-metric percentiles incl. ESS
+        and "verdict" in report  # >= 1 health event (the drilled collapse)
+        and "drift_ratio" in report  # the roofline-drift series CSV
+    )
+
+    sh = f"P={items};S={num_samples};K={top_k};B={batch};steps={steps}"
+    emit("obs_step_off", base_us, sh)
+    emit("obs_step_on", obs_us, sh)
+    emit(
+        "obs_accept", 0.0,
+        f"overhead_pct={overhead_pct:.2f};budget_pct={OVERHEAD_BUDGET_PCT};"
+        f"bitwise_identical={int(bitwise)};report_ok={int(report_ok)};"
+        f"OBS_OK={int(bitwise and report_ok and overhead_pct < OVERHEAD_BUDGET_PCT)}",
+    )
+    assert bitwise, "obs-instrumented trainer diverged from obs-off"
+    assert report_ok, f"rendered report at {run_dir} is missing sections"
+    assert overhead_pct < OVERHEAD_BUDGET_PCT, (
+        f"obs overhead {overhead_pct:.2f}% over the {OVERHEAD_BUDGET_PCT}% "
+        f"budget (off {base_us:.0f}us vs on {obs_us:.0f}us)"
+    )
+    return {"overhead_pct": overhead_pct, "bitwise": bitwise,
+            "report_ok": report_ok}
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
+    obs = "--obs" in sys.argv
     from benchmarks.common import EMITTED, persist
 
     EMITTED.clear()
     t0 = time.time()
-    run(smoke=smoke)
+    if obs:
+        run_obs(smoke=smoke)
+    else:
+        run(smoke=smoke)
     if not smoke:  # CI smoke must not clobber the committed full artifact
-        persist("guard", list(EMITTED), time.time() - t0)
+        persist("obs" if obs else "guard", list(EMITTED), time.time() - t0)
 
 
 if __name__ == "__main__":

@@ -446,17 +446,27 @@ class ExecutionPlan:
         and surrogate fire. Returns (loss, aux). Under a refresh plan
         ``index_state`` is the maintained index (defaults to the plan's
         initial state) — pass the trainer's current state so retrieval
-        sees appended/refreshed items."""
+        sees appended/refreshed items.
+
+        The repro.obs spans below run at TRACE time (execute is jitted):
+        each fires once per compile and measures tracing that segment —
+        the breakdown that localises a retrace, not per-step runtime
+        (per-step phases are the trainer's dispatch/drain spans)."""
+        from repro.obs.trace import span
+
         eps = self.cfg.epsilon if epsilon is None else epsilon
-        h_prop = jax.lax.stop_gradient(policy.user_embedding(params, x))
+        with span("user_embedding"):
+            h_prop = jax.lax.stop_gradient(policy.user_embedding(params, x))
         sample = self.draw(key, h_prop, beta, eps, index_state=index_state)
         # clamp keeps reward lookups in-bounds on pre-masked (padded)
         # slots; their reward is zeroed and their SNIS weight is 0
         valid = sample.actions >= 0
-        rewards = jax.lax.stop_gradient(
-            reward_fn(jnp.maximum(sample.actions, 0)) * valid
-        )
-        return self.surrogate(policy, params, x, beta, sample, rewards)
+        with span("reward"):
+            rewards = jax.lax.stop_gradient(
+                reward_fn(jnp.maximum(sample.actions, 0)) * valid
+            )
+        with span("surrogate"):
+            return self.surrogate(policy, params, x, beta, sample, rewards)
 
     # -- retrieval ------------------------------------------------------
     def retrieve(
@@ -465,19 +475,23 @@ class ExecutionPlan:
         beta: jnp.ndarray,
         index_state: "RefreshState | None" = None,
     ) -> "TopK":
-        if self.refresh is not None:
-            state = (
-                index_state if index_state is not None
-                else self.initial_index_state
-            )
-            return self.retriever(h_prop, beta, state)
-        if self.retriever is not None:
-            return self.retriever(h_prop, beta)
-        from repro.dist.fopo import dist_sharded_topk
+        from repro.obs.trace import span
 
-        return dist_sharded_topk(
-            h_prop, beta, self.cfg.top_k, self.dist, num_items=self.cfg.num_items
-        )
+        with span("retrieval", route=self.cfg.retriever):
+            if self.refresh is not None:
+                state = (
+                    index_state if index_state is not None
+                    else self.initial_index_state
+                )
+                return self.retriever(h_prop, beta, state)
+            if self.retriever is not None:
+                return self.retriever(h_prop, beta)
+            from repro.dist.fopo import dist_sharded_topk
+
+            return dist_sharded_topk(
+                h_prop, beta, self.cfg.top_k, self.dist,
+                num_items=self.cfg.num_items,
+            )
 
     # -- sampling -------------------------------------------------------
     def draw(self, key, h_prop, beta, eps, index_state=None) -> "ProposalSample":
@@ -485,10 +499,14 @@ class ExecutionPlan:
         number) eps >= 1 short-circuits retrieval entirely (pure
         uniform proposal); a traced eps takes the mixture route, which
         reproduces the uniform pmf exactly at eps == 1."""
+        from repro.obs.trace import span
+
         if isinstance(eps, (int, float)) and eps >= 1.0:
-            return self._draw_uniform(key, h_prop.shape[0])
+            with span("sample", route="uniform"):
+                return self._draw_uniform(key, h_prop.shape[0])
         topk = self.retrieve(h_prop, beta, index_state)
-        return self._draw_mixture(key, topk, eps)
+        with span("sample", route="fused" if self.fused_sampler else "mixture"):
+            return self._draw_mixture(key, topk, eps)
 
     def _draw_uniform(self, key, batch: int) -> "ProposalSample":
         from repro.core.proposals import UniformProposal

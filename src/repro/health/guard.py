@@ -54,6 +54,7 @@ __all__ = [
     "health_verdict",
     "init_guard_state",
     "update_guard_state",
+    "verdict_record",
 ]
 
 # verdict bitmask — one bit per in-graph check, OR'd into an int32 scalar
@@ -75,6 +76,14 @@ VERDICT_NAMES = {
 def decode_verdict(verdict: int) -> list[str]:
     """Host-side: the named checks a verdict bitmask fired (log lines)."""
     return [name for bit, name in VERDICT_NAMES.items() if verdict & bit]
+
+
+def verdict_record(step: int, verdict: int) -> dict:
+    """The canonical history["health"] event payload for a fired verdict
+    (see repro.obs.schema) — built in one place so the trainer, the
+    report renderer and the tests agree on its shape."""
+    v = int(verdict)
+    return {"step": int(step), "verdict": v, "checks": decode_verdict(v)}
 
 
 @dataclasses.dataclass(frozen=True)

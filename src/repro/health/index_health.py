@@ -82,12 +82,20 @@ class IndexHealthMonitor:
     without an index). Feed it observations; it answers with the next
     rung's action or None."""
 
-    def __init__(self, cfg: IndexHealthConfig):
+    def __init__(self, cfg: IndexHealthConfig, bus=None):
         self.cfg = cfg
         self.level = 0  # rungs already taken since the last healthy probe
         self.last_overflow = 0  # overflow counter at the last observation
         self._cooldown = 0  # observations still swallowed post-escalation
         self.history: list[dict] = []  # every observation, for history["health"]
+        self.bus = bus  # optional repro.obs MetricsBus (see bind_bus)
+
+    def bind_bus(self, bus) -> None:
+        """Attach a metrics bus (repro.obs.MetricsBus): every observation
+        then also lands as probe-recall/overflow gauges and escalations
+        as a counter, alongside the trainer's index_health events. The
+        monitor stays fully functional without one."""
+        self.bus = bus
 
     @property
     def exhausted(self) -> bool:
@@ -112,6 +120,10 @@ class IndexHealthMonitor:
             "action": None,
         }
         self.history.append(event)
+        if self.bus is not None:
+            if recall is not None:
+                self.bus.gauge("index_probe_recall", recall)
+            self.bus.gauge("index_overflow_delta", grew)
         if self._cooldown > 0:
             self._cooldown -= 1
             return None
@@ -127,6 +139,8 @@ class IndexHealthMonitor:
         self.level += 1
         self._cooldown = cfg.cooldown
         event["action"] = action
+        if self.bus is not None:
+            self.bus.counter("index_ladder_escalations", action=action)
         return action
 
     def note_compaction(self, overflow_after: int) -> None:

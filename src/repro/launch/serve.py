@@ -3,6 +3,12 @@ scale — recsys ranking/retrieval or LM prefill+decode with a KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch din --requests 4
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --requests 2
+
+Serving rides the same telemetry spine as training (repro.obs): request
+lines route through the bus's human sink, per-request latencies land as
+timings, and prefill/decode/retrieval phases as spans. `--obs-dir DIR`
+leaves the run artifacts (metrics.jsonl, trace.json) behind for
+`python -m repro.obs.report DIR`.
 """
 from __future__ import annotations
 
@@ -14,9 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
+from repro.obs.trace import span
 
 
-def _serve_lm(mod, n_req: int) -> None:
+def _serve_lm(mod, n_req: int, bus) -> None:
     from repro.models import lm
 
     cfg = mod.SMOKE_CONFIG
@@ -29,18 +36,23 @@ def _serve_lm(mod, n_req: int) -> None:
         toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, prompt_len)))
         cache = lm.init_cache(cfg, 1, prompt_len + gen_len)
         t0 = time.perf_counter()
-        logits, cache = prefill(params, toks, cache)
+        with span("prefill", request=r):
+            logits, cache = prefill(params, toks, cache)
         out = []
         tok = jnp.argmax(logits, -1)
-        for _ in range(gen_len):
-            out.append(int(tok[0]))
-            logits, cache = decode(params, tok, cache)
-            tok = jnp.argmax(logits, -1)
-        jax.block_until_ready(logits)
-        print(f"req {r}: generated {out} ({(time.perf_counter()-t0)*1e3:.0f} ms)")
+        with span("decode", request=r, tokens=gen_len):
+            for _ in range(gen_len):
+                out.append(int(tok[0]))
+                logits, cache = decode(params, tok, cache)
+                tok = jnp.argmax(logits, -1)
+            jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        bus.timing("serve_request", dt, step=r, arch=cfg.name, family="lm")
+        bus.log(f"req {r}: generated {out} ({dt*1e3:.0f} ms)")
+        bus.drain()
 
 
-def _serve_recsys(mod, n_req: int) -> None:
+def _serve_recsys(mod, n_req: int, bus) -> None:
     from repro.models import recsys
 
     cfg = mod.SMOKE_CONFIG
@@ -54,24 +66,36 @@ def _serve_recsys(mod, n_req: int) -> None:
         else:
             batch["hist"] = jnp.asarray(rng.integers(-1, cfg.item_vocab, (1, cfg.seq_len)))
         t0 = time.perf_counter()
-        vals, ids = recsys.retrieval_topk(cfg, params, batch, k=5)
-        jax.block_until_ready(vals)
-        print(f"req {r}: top-5 items {np.asarray(ids)[0].tolist()} "
-              f"({(time.perf_counter()-t0)*1e3:.0f} ms)")
+        with span("retrieval_topk", request=r):
+            vals, ids = recsys.retrieval_topk(cfg, params, batch, k=5)
+            jax.block_until_ready(vals)
+        dt = time.perf_counter() - t0
+        bus.timing("serve_request", dt, step=r, arch=cfg.name, family="recsys")
+        bus.log(f"req {r}: top-5 items {np.asarray(ids)[0].tolist()} "
+                f"({dt*1e3:.0f} ms)")
+        bus.drain()
 
 
 def main() -> None:
+    from repro.obs.run import ObsConfig, ObsRun
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--obs-dir", default=None,
+                    help="write metrics.jsonl + trace.json here")
     args = ap.parse_args()
     mod = get_arch(args.arch)
-    if mod.FAMILY == "lm":
-        _serve_lm(mod, args.requests)
-    elif mod.FAMILY == "recsys":
-        _serve_recsys(mod, args.requests)
-    else:
-        raise SystemExit(f"{args.arch} ({mod.FAMILY}) has no serving path")
+    obs_cfg = ObsConfig(run_dir=args.obs_dir, drift=None) if args.obs_dir else None
+    with ObsRun(obs_cfg) as run:
+        if mod.FAMILY == "lm":
+            _serve_lm(mod, args.requests, run.bus)
+        elif mod.FAMILY == "recsys":
+            _serve_recsys(mod, args.requests, run.bus)
+        else:
+            raise SystemExit(f"{args.arch} ({mod.FAMILY}) has no serving path")
+    if args.obs_dir:
+        print(f"obs artifacts in {args.obs_dir}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,214 @@
+"""Roofline-drift monitor: measured step time vs the analytic models.
+
+The repo carries carefully built cost models — `benchmarks.roofline`'s
+`snis_hbm_bytes` / `snis_gather_model` / `ivf_query_model` /
+`dist_comms_model`, and the jaxpr walker in `repro.launch.jaxpr_cost` —
+but until now nothing ever checked them against what a live run
+actually does. `DriftMonitor` closes that loop per step:
+
+  * `predict_step_bytes(plan, ...)` evaluates the analytic models at
+    the plan's resolved shape into one predicted per-step HBM byte
+    count (and `predict_step_seconds` divides by the roofline
+    bandwidth);
+  * the first `calibration_steps` measured step times set a baseline
+    scale (the models are TPU-bandwidth rooflines — on CPU interpret
+    mode the absolute constant is off by orders of magnitude, but the
+    *shape scaling* is the signal, so drift is tracked relative to the
+    run's own calibrated baseline);
+  * each later step folds measured/predicted into an EMA drift ratio
+    (1.0 = tracking the model). When the EMA leaves the configured band
+    the monitor emits ONE warning event and stays quiet until the ratio
+    re-enters the (narrower) re-arm band — hysteresis, no warning spam
+    on a ratio hovering at the edge.
+
+The per-step `drift` series + `drift_events` warnings are the feedback
+signal the ROADMAP's shape-aware autotuner consumes: a knob choice
+whose measured cost walks away from the model it was picked by is
+exactly what the autotuner needs to see.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+
+__all__ = [
+    "DriftConfig",
+    "DriftMonitor",
+    "jaxpr_step_bytes",
+    "predict_step_bytes",
+    "predict_step_seconds",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Knobs of the roofline-drift monitor.
+
+    band               relative EMA excursion from the calibrated
+                       baseline that triggers a warning (0.5 = warn when
+                       the EMA drift ratio leaves [0.5, 1.5])
+    ema_decay          decay of the drift-ratio EMA
+    calibration_steps  measured steps folded into the baseline scale
+                       before the monitor arms (absorbs the CPU-vs-TPU
+                       roofline constant)
+    skip_steps         leading measurements discarded before calibration
+                       even starts — step 0 carries jit compilation and
+                       would otherwise poison the baseline into a false
+                       "fast" excursion once steady state is reached
+    rearm_frac         an excursion ends (re-arming the warning) once
+                       |EMA - 1| falls back under band * rearm_frac —
+                       the hysteresis gap that prevents warning spam
+    """
+
+    band: float = 0.5
+    ema_decay: float = 0.9
+    calibration_steps: int = 5
+    skip_steps: int = 1
+    rearm_frac: float = 0.6
+
+    def __post_init__(self):
+        if self.band <= 0:
+            raise ValueError(f"band must be > 0, got {self.band}")
+        if self.skip_steps < 0:
+            raise ValueError(f"skip_steps must be >= 0, got {self.skip_steps}")
+        if not 0.0 < self.ema_decay < 1.0:
+            raise ValueError(f"ema_decay must lie in (0, 1), got {self.ema_decay}")
+        if self.calibration_steps < 1:
+            raise ValueError(
+                f"calibration_steps must be >= 1, got {self.calibration_steps}"
+            )
+        if not 0.0 < self.rearm_frac < 1.0:
+            raise ValueError(
+                f"rearm_frac must lie in (0, 1), got {self.rearm_frac}"
+            )
+
+
+class DriftMonitor:
+    """Feed it measured per-step seconds; it answers with a warning
+    event exactly once per excursion outside the band (None otherwise).
+    `ema` is the current drift ratio (None until calibrated)."""
+
+    def __init__(self, predicted_s: float, cfg: DriftConfig = DriftConfig()):
+        if predicted_s <= 0:
+            raise ValueError(f"predicted_s must be > 0, got {predicted_s}")
+        self.predicted_s = predicted_s
+        self.cfg = cfg
+        self._skip = cfg.skip_steps
+        self._cal: list[float] = []
+        self.scale: float | None = None  # calibrated baseline ratio
+        self.ema: float | None = None
+        self._excursion = False
+        self.warnings = 0
+
+    def observe(self, measured_s: float) -> dict | None:
+        if self._skip > 0:  # warmup (compile) steps: not even calibration
+            self._skip -= 1
+            return None
+        raw = measured_s / self.predicted_s
+        if self.scale is None:
+            self._cal.append(raw)
+            if len(self._cal) >= self.cfg.calibration_steps:
+                self.scale = statistics.median(self._cal)
+            return None
+        r = raw / self.scale
+        d = self.cfg.ema_decay
+        self.ema = r if self.ema is None else d * self.ema + (1.0 - d) * r
+        dev = self.ema - 1.0
+        if not self._excursion and abs(dev) > self.cfg.band:
+            self._excursion = True
+            self.warnings += 1
+            return {
+                "event": "roofline_drift",
+                "direction": "slow" if dev > 0 else "fast",
+                "ema": self.ema,
+                "ratio": r,
+                "band": self.cfg.band,
+            }
+        if self._excursion and abs(dev) < self.cfg.band * self.cfg.rearm_frac:
+            self._excursion = False
+        return None
+
+
+# ---------------------------------------------------------------------------
+# analytic per-step predictions from the roofline models
+# ---------------------------------------------------------------------------
+
+def predict_step_bytes(plan, batch_size: int, embed_dim: int) -> dict | None:
+    """Evaluate the `benchmarks.roofline` models at the plan's resolved
+    shape into per-step HBM byte components. Returns None when the
+    benchmarks package isn't importable (installed-package runs) — the
+    caller should then leave the drift monitor off rather than invent a
+    model."""
+    try:
+        from benchmarks import roofline
+    except ImportError:
+        return None
+    cfg = plan.cfg
+    b, s, k, p = batch_size, cfg.num_samples, cfg.top_k, cfg.num_items
+    l = embed_dim
+    snis = roofline.snis_hbm_bytes(b, s, l, fused=plan.fused)
+    # the (b, S, K) Gumbel round-trip the jax.random mixture pays and
+    # the in-kernel sampler removes (n_model=1 zeroes the comms terms)
+    sampler = roofline.dist_comms_model(
+        b, s, k, l, p, 1, fused_sampler=plan.fused_sampler
+    )["sampler_hbm_bytes"]
+    retrieval = _retrieval_bytes(roofline, plan, b, l, p, k)
+    comms = 0
+    if plan.dist is not None:
+        comms = roofline.dist_comms_model(
+            max(1, b // plan.dist.n_data), s, k, l, p, plan.dist.n_model,
+            fused_sampler=plan.fused_sampler,
+        )["comms_bytes"]
+    total = snis + sampler + retrieval + comms
+    return {
+        "snis_bytes": snis,
+        "sampler_bytes": sampler,
+        "retrieval_bytes": retrieval,
+        "comms_bytes": comms,
+        "total_bytes": total,
+    }
+
+
+def _retrieval_bytes(roofline, plan, b, l, p, k) -> int:
+    """Per-batch retrieval bytes by resolved route. IVF routes without
+    the built index's exact (C, cap) at hand use the canonical
+    C ~ sqrt(P) build heuristic — the calibration step absorbs the
+    constant; the *scaling* is what drift tracks."""
+    c = max(1, int(round(p ** 0.5)))
+    cap = max(1, -(-p // c) * 2)
+    n_probe = 2
+    m = roofline.ivf_query_model(b, l, p, c=c, n_probe=n_probe, cap=cap, k=k)
+    route = plan.cfg.retriever
+    if route == "exact":
+        return m["exact_bytes"]
+    if route == "ivf":
+        return m["ivf_jnp_bytes"]
+    if route == "ivf_pallas":
+        return m["ivf_pallas_bytes"]
+    # streaming / pallas / sharded: one beta pass, carried top-K
+    return m["streaming_bytes"]
+
+
+def predict_step_seconds(
+    plan, batch_size: int, embed_dim: int, *, hbm_bw: float = 819e9
+) -> float | None:
+    """Roofline-time prediction of one step (memory-bound model). The
+    absolute number is a TPU roofline — `DriftMonitor` calibrates the
+    constant away; what survives is the model's shape scaling."""
+    pred = predict_step_bytes(plan, batch_size, embed_dim)
+    if pred is None:
+        return None
+    return pred["total_bytes"] / hbm_bw
+
+
+def jaxpr_step_bytes(fn, *args) -> float | None:
+    """Cross-check: trip-count-aware bytes of ``fn(*args)`` from the
+    jaxpr walker (`repro.launch.jaxpr_cost.analyze`). Heavier than the
+    closed-form models (one abstract trace) — call once per plan, not
+    per step. None when tracing the function fails."""
+    try:
+        from repro.launch.jaxpr_cost import analyze
+
+        return float(analyze(fn, *args)["bytes"])
+    except Exception:
+        return None

@@ -1,0 +1,128 @@
+"""Pluggable sinks of the metrics bus + the human log-line formatters.
+
+RingSink      bounded (or unbounded) in-memory record buffer — the test
+              sink, and the trainer's history backing
+JSONLSink     one JSON object per drained record, appended to
+              <run_dir>/metrics.jsonl (the stream `repro.obs.report`
+              renders)
+HumanLogSink  prints records of name "log" — the trainer's former bare
+              `print` lines route through here, byte-identical by
+              default (timestamps are opt-in so log-scraping keeps
+              working)
+
+The `format_*` helpers are THE single source of the trainer's log-line
+shape: the trainer builds its cadence/rollback lines with them and
+ships them over the bus, so changing a format changes exactly one
+place.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import sys
+import time
+from typing import IO
+
+__all__ = [
+    "HumanLogSink",
+    "JSONLSink",
+    "RingSink",
+    "format_rollback_line",
+    "format_train_line",
+]
+
+
+class RingSink:
+    """In-memory ring of drained records. ``capacity=None`` keeps
+    everything (the trainer's history backing); a bounded capacity makes
+    it a true ring for long-lived monitors/tests."""
+
+    def __init__(self, capacity: int | None = None):
+        self.records: collections.deque = collections.deque(maxlen=capacity)
+
+    def emit(self, record: dict) -> None:
+        self.records.append(record)
+
+    def close(self) -> None:
+        pass
+
+
+class JSONLSink:
+    """Appends one JSON line per record to ``path`` (parent dirs
+    created). Non-serialisable payload leaves degrade to their repr
+    instead of poisoning the stream."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f: IO[str] | None = open(path, "a")
+
+    def emit(self, record: dict) -> None:
+        if self._f is None:
+            return
+        try:
+            line = json.dumps(record)
+        except TypeError:
+            line = json.dumps({**record, "value": repr(record.get("value"))})
+        self._f.write(line + "\n")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.flush()
+            self._f.close()
+            self._f = None
+
+
+class HumanLogSink:
+    """Prints "log" records for humans. Default output is the record
+    message verbatim — identical to the prints it replaced — so
+    log-scraping tests and tooling keep working; ``timestamps=True``
+    prefixes an ISO wall-clock stamp."""
+
+    def __init__(self, stream: IO[str] | None = None, timestamps: bool = False):
+        self.stream = stream if stream is not None else sys.stdout
+        self.timestamps = timestamps
+
+    def emit(self, record: dict) -> None:
+        if record.get("name") != "log":
+            return
+        msg = record["value"]
+        if self.timestamps:
+            stamp = time.strftime("%Y-%m-%dT%H:%M:%S", time.localtime(record["t"]))
+            msg = f"{stamp} {msg}"
+        print(msg, file=self.stream)
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# log-line formats (the trainer's former print strings, verbatim)
+# ---------------------------------------------------------------------------
+
+def format_train_line(
+    step: int,
+    loss: float,
+    aux: dict | None = None,
+    checks: tuple | list = (),
+    degraded: bool = False,
+) -> str:
+    """The log_every cadence line. ``aux`` carries the SNIS diagnostics
+    (ess/rbar/max_wbar) when the estimator produces them."""
+    msg = f"step {step}: loss={float(loss):+.5f}"
+    if aux and "ess" in aux:
+        msg += (
+            f" ess={float(aux['ess']):.1f}"
+            f" rbar={float(aux['rbar']):+.4f}"
+            f" max_wbar={float(aux['max_wbar']):.3f}"
+        )
+    if checks:
+        msg += f" health={','.join(checks)}"
+    if degraded:
+        msg += " [degraded:exact]"
+    return msg
+
+
+def format_rollback_line(step: int, to_step: int, restarts: int) -> str:
+    return f"step {step}: ROLLBACK to {to_step} (restart #{restarts})"

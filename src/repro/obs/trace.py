@@ -1,0 +1,145 @@
+"""Phase tracing: a span API emitting Chrome-trace-format JSON.
+
+``span("retrieval")`` wraps a host-side phase (trainer dispatch/drain,
+index refresh/compact, checkpoint save/restore, health probes) or a
+trace-time phase of the step skeleton (`ExecutionPlan.execute` runs
+under jit — its spans measure *tracing* that segment, recorded once per
+compile, which is exactly the breakdown you want when a retrace
+sneaks in). Spans are nested naturally via ts/dur on one thread track;
+load the written ``trace.json`` in chrome://tracing or Perfetto.
+
+The tracer is ambient: `activate()`/`deactivate()` (or the `tracing()`
+context manager) install one, and `span()` is a cheap no-op when none
+is installed — so library code (the plan, checkpointing, serve) can
+wrap phases unconditionally without plumbing a tracer operand through
+every signature.
+
+`jax.profiler` hooks ride the same gate: `start_jax_profiler(dir)` /
+`stop_jax_profiler()` wrap the device-level profiler for runs that
+need XLA timelines, enabled by `ObsConfig(jax_profiler=True)` only —
+never ambient.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+__all__ = [
+    "Tracer",
+    "activate",
+    "current",
+    "deactivate",
+    "span",
+    "start_jax_profiler",
+    "stop_jax_profiler",
+    "tracing",
+]
+
+_ACTIVE: "Tracer | None" = None
+
+
+class Tracer:
+    """Accumulates Chrome-trace 'complete' (ph=X) events, microsecond
+    timestamps relative to construction."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+        self._t0 = time.perf_counter_ns()
+
+    def _now_us(self) -> float:
+        return (time.perf_counter_ns() - self._t0) / 1e3
+
+    @contextmanager
+    def span(self, name: str, **args):
+        ts = self._now_us()
+        try:
+            yield
+        finally:
+            ev = {"name": name, "ph": "X", "ts": ts,
+                  "dur": self._now_us() - ts, "pid": 0, "tid": 0}
+            if args:
+                ev["args"] = args
+            self.events.append(ev)
+
+    def instant(self, name: str, **args) -> None:
+        ev = {"name": name, "ph": "i", "ts": self._now_us(), "pid": 0,
+              "tid": 0, "s": "t"}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def write(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.events, "displayTimeUnit": "ms"}, f)
+        return path
+
+
+# ---------------------------------------------------------------------------
+# the ambient tracer
+# ---------------------------------------------------------------------------
+
+def activate(tracer: Tracer) -> None:
+    global _ACTIVE
+    _ACTIVE = tracer
+
+
+def deactivate() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def current() -> Tracer | None:
+    return _ACTIVE
+
+
+@contextmanager
+def tracing(tracer: Tracer):
+    """Install ``tracer`` for the duration of the block (restores the
+    previous one — runs can nest, e.g. serve inside a test)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, tracer
+    try:
+        yield tracer
+    finally:
+        _ACTIVE = prev
+
+
+@contextmanager
+def span(name: str, **args):
+    """Record a span on the ambient tracer; a no-op when none is active
+    (one global read — safe to leave in library hot paths)."""
+    t = _ACTIVE
+    if t is None:
+        yield
+        return
+    with t.span(name, **args):
+        yield
+
+
+# ---------------------------------------------------------------------------
+# jax.profiler gating (config-opt-in only)
+# ---------------------------------------------------------------------------
+
+def start_jax_profiler(log_dir: str) -> bool:
+    """Start a jax.profiler trace into ``log_dir``. Returns False (and
+    stays off) when the backend/profiler is unavailable."""
+    import jax
+
+    try:
+        os.makedirs(log_dir, exist_ok=True)
+        jax.profiler.start_trace(log_dir)
+        return True
+    except Exception:
+        return False
+
+
+def stop_jax_profiler() -> None:
+    import jax
+
+    try:
+        jax.profiler.stop_trace()
+    except Exception:
+        pass

@@ -38,6 +38,10 @@ from repro.data.loader import BatchLoader
 from repro.health.guard import grad_global_norm, init_guard_state
 from repro.data.synthetic import SessionDataset
 from repro.mips.exact import topk_exact
+from repro.obs.run import ObsConfig, ObsRun
+from repro.obs.schema import validate_history
+from repro.obs.sinks import format_rollback_line, format_train_line
+from repro.obs.trace import span
 from repro.optim.optimizers import Optimizer, adam, clip_by_global_norm
 from repro.train import checkpoint as ckpt
 
@@ -67,6 +71,11 @@ class TrainerConfig:
     # runs roll back to the last good snapshot, and HealthConfig.index
     # arms the retrieval degradation ladder
     health: "HealthConfig | None" = None
+    # telemetry (repro.obs): history and log lines always route through
+    # the metrics bus; an ObsConfig additionally leaves run artifacts
+    # (JSONL stream, Chrome trace, optional jax.profiler) and arms the
+    # roofline-drift monitor
+    obs: ObsConfig | None = None
 
 
 class FOPOTrainer:
@@ -327,10 +336,11 @@ class FOPOTrainer:
     # ------------------------------------------------------------------
     # the retrieval degradation ladder (repro.health.index_health)
     # ------------------------------------------------------------------
-    def _maybe_probe_index(self, history: dict) -> None:
+    def _maybe_probe_index(self, bus) -> None:
         """Feed the ladder monitor and execute its escalations. Runs at
         the probe cadence (host-side — the sampled recall probe blocks,
-        which is exactly why it is periodic, not per-step)."""
+        which is exactly why it is periodic, not per-step). Observations
+        land on the metrics bus as index_health events."""
         monitor = self._monitor
         if monitor is None or self._degraded or self.index_state is None:
             return
@@ -354,14 +364,17 @@ class FOPOTrainer:
         overflow = int(jnp.max(self.index_state.overflow))  # sharded: worst
         action = monitor.observe(recall, overflow)
         if recall is not None or action:
-            history["index_health"].append(
+            bus.event(
+                "index_health",
                 {"step": self.step, "recall": recall, "overflow": overflow,
-                 "action": action}
+                 "action": action},
+                step=self.step,
             )
         if action in ("compact", "rebuild"):
-            self.index_state = self._refresh_fns[action](
-                self.index_state, self.beta
-            )
+            with span(f"index_{action}", step=self.step):
+                self.index_state = self._refresh_fns[action](
+                    self.index_state, self.beta
+                )
         elif action == "fallback":
             self._degrade()
 
@@ -451,9 +464,10 @@ class FOPOTrainer:
         # fallback=True: a corrupt latest checkpoint (checksum mismatch,
         # torn npz) walks back to the previous rotated one instead of
         # resuming garbage or dying
-        step, state, extra = ckpt.restore_checkpoint(
-            cfg.checkpoint_dir, self._ckpt_state(), fallback=True
-        )
+        with span("checkpoint_restore", step=self.step):
+            step, state, extra = ckpt.restore_checkpoint(
+                cfg.checkpoint_dir, self._ckpt_state(), fallback=True
+            )
         self._adopt_state(state)
         self.step = step
         if "loader" in extra:
@@ -468,124 +482,148 @@ class FOPOTrainer:
         if not cfg.checkpoint_dir:
             return
         health = cfg.health
-        ckpt.save_checkpoint(
-            cfg.checkpoint_dir,
-            self.step,
-            self._ckpt_state(),
-            extra={
-                "loader": self.loader.state.to_dict(),
-                "restarts": self._restarts,
-                "degraded": self._degraded,
-            },
-            keep=cfg.keep_checkpoints,
-            retries=health.save_retries if health is not None else 0,
-            backoff=health.save_backoff if health is not None else 0.05,
-        )
+        with span("checkpoint_save", step=self.step):
+            ckpt.save_checkpoint(
+                cfg.checkpoint_dir,
+                self.step,
+                self._ckpt_state(),
+                extra={
+                    "loader": self.loader.state.to_dict(),
+                    "restarts": self._restarts,
+                    "degraded": self._degraded,
+                },
+                keep=cfg.keep_checkpoints,
+                retries=health.save_retries if health is not None else 0,
+                backoff=health.save_backoff if health is not None else 0.05,
+            )
 
     # ------------------------------------------------------------------
     def train(self, num_steps: int | None = None, log_every: int = 0) -> dict:
         cfg = self.cfg
         health = cfg.health
         n = num_steps if num_steps is not None else cfg.num_steps
-        history: dict[str, Any] = {
-            "loss": [], "reward": [], "step_time": [],
-            "ess": [], "rbar": [], "max_wbar": [],
-            "health": [], "events": [], "index_health": [],
-        }
         if health is not None and self._snapshot is None:
             self._take_snapshot()  # step-0 rollback target
         t_total = time.perf_counter()
-        i = 0
-        while i < n:
-            i += 1
-            if self.fault_plan is not None:
-                self.fault_plan.maybe_kill(self.step)
-            batch = self.loader.next_batch()
-            self._train_key, sub = jax.random.split(self._train_key)
-            eps = adaptive_epsilon(self.step, cfg.num_steps) if cfg.adaptive_eps else 0.0
-            fault = (
-                self.fault_plan.signals(self.step)
-                if self.fault_plan is not None else None
-            )
-            t0 = time.perf_counter()
-            (
-                self.params, self.opt_state, self.guard_state, loss, aux,
-                verdict,
-            ) = self._train_step(
-                self.params,
-                self.opt_state,
-                self.guard_state,
-                sub,
-                self._place_batch(batch["contexts"]),
-                self._place_batch(batch["positives"]),
-                eps,
-                self.beta,
-                self.index_state,
-                fault,
-            )
-            if self._refresh_fns is not None:
-                # dispatched async while the step above is in flight —
-                # the step never blocks on maintenance (and vice versa)
-                self._maybe_refresh_index()
-            jax.block_until_ready(loss)
-            history["step_time"].append(time.perf_counter() - t0)
-            history["loss"].append(float(loss))
-            for k in DIAGNOSTIC_KEYS:
-                if k in aux:
-                    history[k].append(float(aux[k]))
-            self.step += 1
-            # the verdict is consumed HERE, after the step result is
-            # already on host — reading it adds no step-time sync
-            v = int(verdict) if health is not None else 0
-            if v:
-                from repro.health.guard import decode_verdict
-
-                history["health"].append(
-                    {"step": self.step, "verdict": v,
-                     "checks": decode_verdict(v)}
+        # one telemetry run per train() call: the bus's ring sink IS the
+        # history backing (cfg.obs=None still runs bus + ring + human
+        # log sink — no files, no tracer, no drift monitor)
+        with ObsRun(cfg.obs, predicted_step_s=self._predicted_step_s()) as run:
+            bus = run.bus
+            if self._monitor is not None:
+                self._monitor.bind_bus(bus)
+            i = 0
+            while i < n:
+                i += 1
+                if self.fault_plan is not None:
+                    self.fault_plan.maybe_kill(self.step)
+                batch = self.loader.next_batch()
+                self._train_key, sub = jax.random.split(self._train_key)
+                eps = adaptive_epsilon(self.step, cfg.num_steps) if cfg.adaptive_eps else 0.0
+                fault = (
+                    self.fault_plan.signals(self.step)
+                    if self.fault_plan is not None else None
                 )
-                if int(self.guard_state.consecutive_bad) >= health.max_consecutive_bad:
-                    rolled_to = (
-                        self._snapshot["step"] if self._snapshot else self.step
+                t0 = time.perf_counter()
+                with span("dispatch", step=self.step):
+                    (
+                        self.params, self.opt_state, self.guard_state, loss,
+                        aux, verdict,
+                    ) = self._train_step(
+                        self.params,
+                        self.opt_state,
+                        self.guard_state,
+                        sub,
+                        self._place_batch(batch["contexts"]),
+                        self._place_batch(batch["positives"]),
+                        eps,
+                        self.beta,
+                        self.index_state,
+                        fault,
                     )
-                    self._rollback()
-                    history["events"].append(
-                        {"step": self.step, "event": "rollback",
-                         "to": rolled_to, "restarts": self._restarts}
-                    )
-                    if log_every:
-                        print(
-                            f"step {self.step}: ROLLBACK to {rolled_to} "
-                            f"(restart #{self._restarts})"
-                        )
-                    continue
-            elif (
-                health is not None
-                and self.step % health.snapshot_every == 0
-            ):
-                self._take_snapshot()
-            self._maybe_probe_index(history)
-            if cfg.checkpoint_every and self.step % cfg.checkpoint_every == 0:
-                self.save()
-            if cfg.eval_every and self.step % cfg.eval_every == 0:
-                history["reward"].append((self.step, self.evaluate()))
-            if log_every and self.step % log_every == 0:
-                msg = f"step {self.step}: loss={float(loss):+.5f}"
-                if "ess" in aux:
-                    msg += (
-                        f" ess={float(aux['ess']):.1f}"
-                        f" rbar={float(aux['rbar']):+.4f}"
-                        f" max_wbar={float(aux['max_wbar']):.3f}"
-                    )
+                # device scalars go on the bus NOW, as in-flight futures —
+                # they are only read at drain(), after the block below
+                bus.gauge("loss", loss, step=self.step)
+                for k in DIAGNOSTIC_KEYS:
+                    if k in aux:
+                        bus.gauge(k, aux[k], step=self.step)
+                if self._refresh_fns is not None:
+                    # dispatched async while the step above is in flight —
+                    # the step never blocks on maintenance (and vice versa)
+                    with span("index_refresh", step=self.step):
+                        self._maybe_refresh_index()
+                with span("drain", step=self.step):
+                    jax.block_until_ready(loss)
+                run.observe_step_time(time.perf_counter() - t0, self.step)
+                self.step += 1
+                # the verdict is consumed HERE, after the step result is
+                # already on host — reading it adds no step-time sync
+                v = int(verdict) if health is not None else 0
                 if v:
+                    from repro.health.guard import verdict_record
+
+                    bus.event("health", verdict_record(self.step, v),
+                              step=self.step)
+                    if int(self.guard_state.consecutive_bad) >= health.max_consecutive_bad:
+                        rolled_to = (
+                            self._snapshot["step"] if self._snapshot else self.step
+                        )
+                        self._rollback()
+                        bus.event(
+                            "events",
+                            {"step": self.step, "event": "rollback",
+                             "to": rolled_to, "restarts": self._restarts},
+                            step=self.step,
+                        )
+                        if log_every:
+                            bus.log(format_rollback_line(
+                                self.step, rolled_to, self._restarts
+                            ))
+                        bus.drain()
+                        continue
+                elif (
+                    health is not None
+                    and self.step % health.snapshot_every == 0
+                ):
+                    self._take_snapshot()
+                with span("index_probe", step=self.step):
+                    self._maybe_probe_index(bus)
+                if cfg.checkpoint_every and self.step % cfg.checkpoint_every == 0:
+                    self.save()
+                if cfg.eval_every and self.step % cfg.eval_every == 0:
+                    with span("eval", step=self.step):
+                        bus.event(
+                            "reward",
+                            {"step": self.step, "value": self.evaluate()},
+                            step=self.step,
+                        )
+                if log_every and self.step % log_every == 0:
                     from repro.health.guard import decode_verdict
 
-                    msg += f" health={','.join(decode_verdict(v))}"
-                if self._degraded:
-                    msg += " [degraded:exact]"
-                print(msg)
+                    bus.log(format_train_line(
+                        self.step, float(loss),
+                        {k: float(aux[k]) for k in DIAGNOSTIC_KEYS if k in aux},
+                        decode_verdict(v) if v else (),
+                        self._degraded,
+                    ))
+                bus.drain()  # post-block: futures -> host floats, logs out
+            history = run.history()
         history["total_time"] = time.perf_counter() - t_total
-        return history
+        return validate_history(history)
+
+    def _predicted_step_s(self) -> float | None:
+        """Analytic roofline prediction of one step's wall time — the
+        drift monitor's denominator. None (monitor stays off) when the
+        estimator has no resolved plan, the obs config doesn't arm
+        drift, or the roofline models aren't importable."""
+        obs = self.cfg.obs
+        if obs is None or obs.drift is None or self.plan is None:
+            return None
+        from repro.obs.drift import predict_step_seconds
+
+        return predict_step_seconds(
+            self.plan, self.cfg.batch_size, self.beta.shape[1]
+        )
 
     # ------------------------------------------------------------------
     def _place_batch(self, arr) -> jnp.ndarray:

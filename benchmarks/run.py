@@ -26,6 +26,7 @@ from benchmarks import (
     kernel_bench,
     retrieval,
     roofline,
+    serve,
     rq0_fixed_embeddings,
     rq1_speedup,
     rq2_epsilon,
@@ -47,6 +48,7 @@ SUITES = {
     "index": index_maintenance.run,  # incremental IVF maintenance vs rebuild
     "guard": guard_overhead.run,  # guarded-step overhead + bitwise parity
     "roofline": roofline.run,
+    "serve": serve.run,  # continuous-batching engine vs sequential loop
 }
 
 

@@ -428,6 +428,38 @@ class ExecutionPlan:
         )
 
     # ------------------------------------------------------------------
+    # the query-only serve path: user embedding -> retrieval, nothing else
+    # ------------------------------------------------------------------
+    def execute_query(
+        self,
+        policy,
+        params,
+        x: jnp.ndarray,  # [B, Dx] request contexts
+        beta: jnp.ndarray,  # [P, L] item embeddings
+        index_state: "RefreshState | None" = None,
+    ) -> "TopK":
+        """The inference half of `execute()`: h_theta(x) through the
+        plan's resolved retriever — no sampling, no reward, no
+        surrogate. This is the ONE serve path: the recsys MIPS route
+        and the LM prefill/decode route both call it, so serving rides
+        the same retriever resolution (interpret rule, IVF index
+        operand, exact fallback) as training. Under a refresh plan the
+        maintained index rides as ``index_state`` exactly as in
+        `execute()`, which is what lets the serving engine reuse the
+        degradation ladder unchanged."""
+        h = self._user_embedding(policy, params, x, route="serve")
+        return self.retrieve(h, beta, index_state)
+
+    def _user_embedding(self, policy, params, x, route="train") -> jnp.ndarray:
+        """h_theta(x) under stop_gradient — shared by `execute()` and
+        `execute_query()` so the training and serving paths embed
+        identically by construction."""
+        from repro.obs.trace import span
+
+        with span("user_embedding", route=route):
+            return jax.lax.stop_gradient(policy.user_embedding(params, x))
+
+    # ------------------------------------------------------------------
     # the shared step skeleton: retrieval -> sample -> weight -> reduce
     # ------------------------------------------------------------------
     def execute(
@@ -455,8 +487,7 @@ class ExecutionPlan:
         from repro.obs.trace import span
 
         eps = self.cfg.epsilon if epsilon is None else epsilon
-        with span("user_embedding"):
-            h_prop = jax.lax.stop_gradient(policy.user_embedding(params, x))
+        h_prop = self._user_embedding(policy, params, x)
         sample = self.draw(key, h_prop, beta, eps, index_state=index_state)
         # clamp keeps reward lookups in-bounds on pre-masked (padded)
         # slots; their reward is zeroed and their SNIS weight is 0

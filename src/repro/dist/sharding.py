@@ -104,7 +104,9 @@ def lm_param_specs(params: Any) -> Any:
     return jax.tree_util.tree_map_with_path(spec, params)
 
 
-def lm_cache_specs(cache: Any, batch_axis, model_axis=MODEL_AXIS) -> Any:
+def lm_cache_specs(
+    cache: Any, batch_axis, model_axis=MODEL_AXIS, *, cache_axes=None
+) -> Any:
     """KV-cache spec tree: k/v are [n_layers, B, S, KV, Dh]. Batch is
     sharded over `batch_axis` (None for serving cells whose batch does
     not divide the DP extent — `launch/specs.py` decides), and the
@@ -113,14 +115,38 @@ def lm_cache_specs(cache: Any, batch_axis, model_axis=MODEL_AXIS) -> Any:
     heads — splitting Dh keeps the cache distributed instead of
     replicating 4+ GB per device). The scan-carry layer dim and the
     sequence dim are never sharded (decode's dynamic_update_slice would
-    cross shards)."""
+    cross shards).
+
+    ``cache_axes`` overrides the head-side rule per cell:
+
+      None    legacy auto rule (KV heads first, Dh fallback)
+      "kv"    shard KV heads only (Dh never) — divisibility-guarded
+      "dh"    shard head_dim only — divisibility-guarded
+      "none"  replicate both head dims
+
+    Decode cells on GQA archs need "none": rope's rotate-half crosses a
+    Dh split, so the auto Dh fallback makes XLA fully rematerialise the
+    cache layout every step — replicating the head dims is cheaper than
+    resharding [n, B, S, KV, Dh] once per token.
+    """
+    if cache_axes not in (None, "kv", "dh", "none"):
+        raise ValueError(
+            f"cache_axes must be None, 'kv', 'dh' or 'none', got {cache_axes!r}"
+        )
 
     def spec(leaf):
         if len(leaf.shape) != 5:  # `length` scalar
             return _replicated(leaf)
         _, b, _, kv, dh = leaf.shape
-        kv_ax = _guard(kv, model_axis)
-        dh_ax = _guard(dh, model_axis) if kv_ax is None else None
+        if cache_axes == "none":
+            kv_ax = dh_ax = None
+        elif cache_axes == "kv":
+            kv_ax, dh_ax = _guard(kv, model_axis), None
+        elif cache_axes == "dh":
+            kv_ax, dh_ax = None, _guard(dh, model_axis)
+        else:
+            kv_ax = _guard(kv, model_axis)
+            dh_ax = _guard(dh, model_axis) if kv_ax is None else None
         return P(None, _guard(b, batch_axis), None, kv_ax, dh_ax)
 
     return jax.tree.map(spec, cache)

@@ -1,99 +1,134 @@
-"""Serving launcher: batched request serving for a pool arch at smoke
-scale — recsys ranking/retrieval or LM prefill+decode with a KV cache.
+"""Serving launcher: the continuous-batching engine (repro.serve) for a
+pool arch — recsys retrieval through the `ivf_topk` plan retriever, or
+LM prefill + greedy decode with every next-token choice through the
+same query-only plan path.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch din --requests 4
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --requests 2
+    PYTHONPATH=src python -m repro.launch.serve --arch sasrec --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --arch din --requests 16
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --requests 8
 
-Serving rides the same telemetry spine as training (repro.obs): request
-lines route through the bus's human sink, per-request latencies land as
-timings, and prefill/decode/retrieval phases as spans. `--obs-dir DIR`
-leaves the run artifacts (metrics.jsonl, trace.json) behind for
-`python -m repro.obs.report DIR`.
+Requests are enqueued on a virtual arrival clock (``--qps`` spaces
+them; 0 = all at once, the closed-loop shape) and coalesced into padded
+micro-batches under ``--max-batch`` / ``--max-wait-ms``. Serving rides
+the telemetry spine (repro.obs): per-request queue-wait/latency
+timings, per-batch service spans and occupancy gauges. `--obs-dir DIR`
+leaves metrics.jsonl + trace.json behind for
+`python -m repro.obs.report DIR` (which renders a Serving section).
+`--ladder` arms the retrieval degradation ladder on the live index for
+the MIPS archs (sasrec/dien).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.obs.trace import span
 
 
-def _serve_lm(mod, n_req: int, bus) -> None:
-    from repro.models import lm
-
+def build_route(mod, args, rng):
+    """Resolve the arch's serving route + a payload generator."""
     cfg = mod.SMOKE_CONFIG
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    prompt_len, gen_len = 16, 8
-    prefill = jax.jit(lambda p, t, c: lm.prefill(cfg, p, t, c))
-    decode = jax.jit(lambda p, t, c: lm.decode_step(cfg, p, t, c))
-    for r in range(n_req):
-        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, prompt_len)))
-        cache = lm.init_cache(cfg, 1, prompt_len + gen_len)
-        t0 = time.perf_counter()
-        with span("prefill", request=r):
-            logits, cache = prefill(params, toks, cache)
-        out = []
-        tok = jnp.argmax(logits, -1)
-        with span("decode", request=r, tokens=gen_len):
-            for _ in range(gen_len):
-                out.append(int(tok[0]))
-                logits, cache = decode(params, tok, cache)
-                tok = jnp.argmax(logits, -1)
-            jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
-        bus.timing("serve_request", dt, step=r, arch=cfg.name, family="lm")
-        bus.log(f"req {r}: generated {out} ({dt*1e3:.0f} ms)")
-        bus.drain()
+    if mod.FAMILY == "lm":
+        from repro.models import lm
+        from repro.serve import LMGenerateRoute
 
-
-def _serve_recsys(mod, n_req: int, bus) -> None:
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        route = LMGenerateRoute(
+            cfg, params, prompt_len=args.prompt_len, gen_len=args.gen_len,
+            max_batch=args.max_batch,
+        )
+        payload = lambda: rng.integers(
+            0, cfg.vocab_size, (args.prompt_len,)
+        ).astype(np.int32)
+        return cfg, route, payload
+    if mod.FAMILY != "recsys":
+        raise SystemExit(f"{cfg.name} ({mod.FAMILY}) has no serving path")
     from repro.models import recsys
 
-    cfg = mod.SMOKE_CONFIG
     params = recsys.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    for r in range(n_req):
-        batch = {"candidates": jnp.arange(500, dtype=jnp.int32)}
-        if cfg.kind == "wide_deep":
-            batch["sparse"] = jnp.asarray(rng.integers(0, 10**6, (1, cfg.n_sparse)))
-            batch["dense"] = jnp.asarray(rng.normal(size=(1, cfg.n_dense)), jnp.float32)
-        else:
-            batch["hist"] = jnp.asarray(rng.integers(-1, cfg.item_vocab, (1, cfg.seq_len)))
-        t0 = time.perf_counter()
-        with span("retrieval_topk", request=r):
-            vals, ids = recsys.retrieval_topk(cfg, params, batch, k=5)
-            jax.block_until_ready(vals)
-        dt = time.perf_counter() - t0
-        bus.timing("serve_request", dt, step=r, arch=cfg.name, family="recsys")
-        bus.log(f"req {r}: top-5 items {np.asarray(ids)[0].tolist()} "
-                f"({dt*1e3:.0f} ms)")
-        bus.drain()
+    if cfg.kind in ("sasrec", "dien"):
+        from repro.serve import RecsysMIPSRoute
+
+        probe = None
+        if args.ladder:
+            probe = rng.integers(-1, cfg.item_vocab, (32, cfg.seq_len)).astype(
+                np.int32
+            )
+        route = RecsysMIPSRoute(cfg, params, k=args.k, probe_hists=probe)
+        payload = lambda: rng.integers(
+            -1, cfg.item_vocab, (cfg.seq_len,)
+        ).astype(np.int32)
+        return cfg, route, payload
+    from repro.serve import DenseCandidateRoute
+
+    route = DenseCandidateRoute(
+        cfg, params, candidates=np.arange(500, dtype=np.int32), k=args.k
+    )
+    if cfg.kind == "wide_deep":
+        payload = lambda: (
+            rng.integers(0, 10**6, (cfg.n_sparse,)).astype(np.int32),
+            rng.normal(size=(cfg.n_dense,)).astype(np.float32),
+        )
+    else:
+        payload = lambda: rng.integers(-1, cfg.item_vocab, (cfg.seq_len,)).astype(
+            np.int32
+        )
+    return cfg, route, payload
 
 
 def main() -> None:
+    from repro.obs.report import percentile
     from repro.obs.run import ObsConfig, ObsRun
+    from repro.serve import CoalescePolicy, ServingEngine
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="offered arrival rate (0 = all at t=0, closed loop)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--k", type=int, default=10, help="top-k per request")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--ladder", action="store_true",
+                    help="arm the retrieval degradation ladder (MIPS archs)")
     ap.add_argument("--obs-dir", default=None,
                     help="write metrics.jsonl + trace.json here")
     args = ap.parse_args()
     mod = get_arch(args.arch)
+    rng = np.random.default_rng(0)
     obs_cfg = ObsConfig(run_dir=args.obs_dir, drift=None) if args.obs_dir else None
     with ObsRun(obs_cfg) as run:
-        if mod.FAMILY == "lm":
-            _serve_lm(mod, args.requests, run.bus)
-        elif mod.FAMILY == "recsys":
-            _serve_recsys(mod, args.requests, run.bus)
-        else:
-            raise SystemExit(f"{args.arch} ({mod.FAMILY}) has no serving path")
+        cfg, route, payload = build_route(mod, args, rng)
+        health = None
+        if args.ladder and hasattr(route, "probe"):
+            from repro.health.index_health import IndexHealthConfig
+
+            health = IndexHealthConfig(probe_every=4, recall_floor=0.5)
+        engine = ServingEngine(
+            route,
+            CoalescePolicy(
+                max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3
+            ),
+            bus=run.bus, health=health,
+        )
+        engine.warmup()
+        for i in range(args.requests):
+            engine.submit(payload(), arrival=i / args.qps if args.qps else 0.0)
+        records = engine.drain()
+        lats = [r.latency for r in records]
+        makespan = max(r.finish for r in records) - records[0].arrival
+        run.bus.log(
+            f"{cfg.name}: {len(records)} requests in {engine.batches} batches "
+            f"(occupancy {engine.occupancy():.2f}) — p50 "
+            f"{percentile(lats, 50) * 1e3:.1f} ms, p99 "
+            f"{percentile(lats, 99) * 1e3:.1f} ms, "
+            f"{len(records) / makespan:.1f} req/s"
+        )
+        run.bus.drain()
     if args.obs_dir:
         print(f"obs artifacts in {args.obs_dir}")
 

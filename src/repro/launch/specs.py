@@ -15,6 +15,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.dist.sharding import (
+    AXIS_SIZES,
     gnn_param_specs,
     lm_cache_specs,
     lm_param_specs,
@@ -129,7 +130,13 @@ def _lm_program(
     if cell.kind == "decode":
         cache = lm.abstract_cache(cfg, cell.global_batch, cell.seq_len)
         batch_axis = dp if cell.global_batch % (32 if multi_pod else 16) == 0 else None
-        cspecs = lm_cache_specs(cache, batch_axis, "model")
+        # GQA archs (KV heads < model axis) must NOT take the Dh
+        # fallback in decode: rope's rotate-half crosses a Dh split, so
+        # XLA fully rematerialises the cache layout every token.
+        # Replicate the head dims instead; olmoe (16 KV) keeps the KV
+        # shard through the same override.
+        cache_axes = "kv" if cfg.num_kv_heads % AXIS_SIZES["model"] == 0 else "none"
+        cspecs = lm_cache_specs(cache, batch_axis, "model", cache_axes=cache_axes)
         token = SDS((cell.global_batch,), jnp.int32)
 
         def fn(params_, token_, cache_):

@@ -367,8 +367,13 @@ def abstract_cache(cfg: LMConfig, batch: int, max_len: int) -> KVCache:
     )
 
 
-def prefill(cfg: LMConfig, params, tokens: jnp.ndarray, cache: KVCache):
-    """Process a full prompt, fill the cache, return last-position logits."""
+def prefill(cfg: LMConfig, params, tokens: jnp.ndarray, cache: KVCache,
+            *, return_hidden: bool = False):
+    """Process a full prompt, fill the cache, return last-position
+    logits — or, with ``return_hidden``, the last-position hidden state
+    [B, d] (post final norm, pre unembed): the serve route's MIPS query
+    over the unembed rows. `softcap` is strictly monotonic, so top-k
+    over ``hidden @ unembed.T`` preserves the logits' argmax ordering."""
     b, s = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
     if cfg.name.startswith("gemma"):
@@ -426,8 +431,11 @@ def prefill(cfg: LMConfig, params, tokens: jnp.ndarray, cache: KVCache):
         k_all, v_all = jnp.stack(ks), jnp.stack(vs)
 
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
-    unembed = params.get("unembed", params["embed"])
-    logits = softcap(x[:, -1] @ unembed.T, cfg.final_logit_softcap)
+    if return_hidden:
+        out = x[:, -1]
+    else:
+        unembed = params.get("unembed", params["embed"])
+        out = softcap(x[:, -1] @ unembed.T, cfg.final_logit_softcap)
     max_len = cache.k.shape[2]
     new_cache = KVCache(
         k=jax.lax.dynamic_update_slice(
@@ -438,11 +446,14 @@ def prefill(cfg: LMConfig, params, tokens: jnp.ndarray, cache: KVCache):
         ),
         length=jnp.asarray(s, jnp.int32),
     )
-    return logits, new_cache
+    return out, new_cache
 
 
-def decode_step(cfg: LMConfig, params, token: jnp.ndarray, cache: KVCache):
-    """One decode step. token [B] -> (logits [B, V], cache')."""
+def decode_step(cfg: LMConfig, params, token: jnp.ndarray, cache: KVCache,
+                *, return_hidden: bool = False):
+    """One decode step. token [B] -> (logits [B, V], cache'); with
+    ``return_hidden`` the hidden state [B, d] instead of logits (see
+    `prefill` — same serve-route MIPS query)."""
     b = token.shape[0]
     h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
     x = jnp.take(params["embed"], token[:, None], axis=0)  # [B,1,d]
@@ -536,6 +547,9 @@ def decode_step(cfg: LMConfig, params, token: jnp.ndarray, cache: KVCache):
         k_all, v_all = jnp.stack(ks), jnp.stack(vs)
 
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
-    unembed = params.get("unembed", params["embed"])
-    logits = softcap(x[:, 0] @ unembed.T, cfg.final_logit_softcap)
-    return logits, KVCache(k=k_all, v=v_all, length=cache.length + 1)
+    if return_hidden:
+        out = x[:, 0]
+    else:
+        unembed = params.get("unembed", params["embed"])
+        out = softcap(x[:, 0] @ unembed.T, cfg.final_logit_softcap)
+    return out, KVCache(k=k_all, v=v_all, length=cache.length + 1)

@@ -16,7 +16,12 @@ import json
 import os
 
 from repro.obs.run import METRICS_FILE
-from repro.obs.schema import EVENT_KEYS, SERIES_KEYS
+from repro.obs.schema import (
+    EVENT_KEYS,
+    SERIES_KEYS,
+    SERVE_GAUGE_KEYS,
+    SERVE_TIMING_KEYS,
+)
 
 __all__ = ["load_records", "render", "render_run"]
 
@@ -49,6 +54,15 @@ def _series(records: list[dict]) -> dict[str, list[float]]:
     out: dict[str, list[float]] = {}
     for r in records:
         if r.get("kind") in ("gauge", "timing") and r.get("name") in SERIES_KEYS:
+            out.setdefault(r["name"], []).append(r["value"])
+    return out
+
+
+def _serve_series(records: list[dict]) -> dict[str, list[float]]:
+    keys = set(SERVE_TIMING_KEYS) | set(SERVE_GAUGE_KEYS)
+    out: dict[str, list[float]] = {}
+    for r in records:
+        if r.get("kind") in ("gauge", "timing") and r.get("name") in keys:
             out.setdefault(r["name"], []).append(r["value"])
     return out
 
@@ -99,6 +113,30 @@ def render(records: list[dict], title: str = "Run report") -> str:
         ]
         for step, kind, detail in sorted(timeline):
             lines.append(f"| {step} | {kind} | {detail} |")
+        lines.append("")
+
+    # -- serving --------------------------------------------------------
+    serve = _serve_series(records)
+    if serve.get("serve_latency"):
+        lats = serve["serve_latency"]
+        waits = serve.get("serve_queue_wait", [])
+        sizes = serve.get("serve_batch_size", [])
+        occ = serve.get("serve_occupancy", [])
+        lines += ["## Serving", ""]
+        lines += [
+            f"{len(lats)} requests in {len(sizes)} batches — mean batch "
+            f"size {sum(sizes) / len(sizes):.2f}, mean occupancy "
+            f"{sum(occ) / len(occ):.2f}." if sizes else
+            f"{len(lats)} requests.", "",
+        ]
+        header = "| metric (ms) | n | " + " | ".join(f"p{p}" for p in PCTS) + " | max |"
+        lines += [header, "|---|---|" + "---|" * (len(PCTS) + 1)]
+        for name, vs in (("e2e latency", lats), ("queue wait", waits),
+                         ("batch service", serve.get("serve_batch_service", []))):
+            if not vs:
+                continue
+            pcts = " | ".join(f"{percentile(vs, p) * 1e3:.3g}" for p in PCTS)
+            lines.append(f"| {name} | {len(vs)} | {pcts} | {max(vs) * 1e3:.3g} |")
         lines.append("")
 
     # -- index ladder ---------------------------------------------------

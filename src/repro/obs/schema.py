@@ -23,6 +23,8 @@ __all__ = [
     "HISTORY_SCHEMA",
     "SCALAR_KEYS",
     "SERIES_KEYS",
+    "SERVE_GAUGE_KEYS",
+    "SERVE_TIMING_KEYS",
     "empty_history",
     "history_from_records",
     "validate_history",
@@ -49,6 +51,13 @@ HISTORY_SCHEMA: dict[str, tuple[str, str]] = {
 SERIES_KEYS = tuple(k for k, (kind, _) in HISTORY_SCHEMA.items() if kind == "series")
 EVENT_KEYS = tuple(k for k, (kind, _) in HISTORY_SCHEMA.items() if kind == "events")
 SCALAR_KEYS = tuple(k for k, (kind, _) in HISTORY_SCHEMA.items() if kind == "scalar")
+
+# Serving-engine metrics (repro.serve.engine) are bus-only: they ride
+# the JSONL stream and the report's Serving section, NOT the trainer's
+# history dict — `history_from_records` drops them by design. Declared
+# here so the report renderer and tests share one source of truth.
+SERVE_TIMING_KEYS = ("serve_queue_wait", "serve_latency", "serve_batch_service")
+SERVE_GAUGE_KEYS = ("serve_batch_size", "serve_occupancy")
 
 
 def empty_history() -> dict:

@@ -1,0 +1,25 @@
+"""repro.serve — the continuous-batching inference engine.
+
+Requests -> queue -> coalesced padded micro-batches -> one jitted route
+(retrieval through the training stack's resolved ExecutionPlan), with
+the PR-7 degradation ladder on the live index and PR-8 telemetry on
+every request. See `repro.launch.serve` for the CLI and
+`benchmarks.serve` for the latency/throughput suite.
+"""
+from repro.serve.coalescer import CoalescePolicy, Request, next_batch, pad_payloads
+from repro.serve.engine import RequestRecord, ServingEngine
+from repro.serve.planner import QueryPlanner
+from repro.serve.routes import DenseCandidateRoute, LMGenerateRoute, RecsysMIPSRoute
+
+__all__ = [
+    "CoalescePolicy",
+    "DenseCandidateRoute",
+    "LMGenerateRoute",
+    "QueryPlanner",
+    "RecsysMIPSRoute",
+    "Request",
+    "RequestRecord",
+    "ServingEngine",
+    "next_batch",
+    "pad_payloads",
+]

@@ -1,0 +1,198 @@
+"""The continuous-batching serving engine.
+
+`ServingEngine` owns the request queue, the coalescing policy, the
+health monitor, and the telemetry — the route owns the model. The loop
+runs a hybrid clock: arrivals/launches/finishes advance on a VIRTUAL
+event clock driven by the coalescer (`next_batch`), while each batch's
+service time is the REAL measured wall time of the route's jitted run.
+That split makes offered-QPS latency sweeps exact and reproducible
+(queue dynamics are computed, not raced against the host scheduler)
+while every latency still contains the true model cost.
+
+Telemetry (repro.obs bus, drained once per batch — the same
+record-then-drain discipline as the trainer):
+
+    serve_queue_wait     timing, per request (launch - arrival)
+    serve_latency        timing, per request (finish - arrival)
+    serve_batch_service  timing, per batch (measured model wall time)
+    serve_batch_size     gauge, per batch (real rows in the pad)
+    serve_occupancy      gauge, per batch (real rows / max_batch)
+    serve_requests       counter
+    index_health         events, when the degradation ladder is armed
+
+The ladder rides exactly as in the trainer: an `IndexHealthConfig`
+arms an `IndexHealthMonitor`; every ``probe_every`` batches the route's
+sampled-recall probe + overflow counter feed `observe()`, and the
+monitor's verdicts execute through the route's ladder hooks
+(compact -> rebuild -> pre-warmed exact fallback). Requests keep
+answering through every rung — that is the whole point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+
+from repro.obs.trace import span
+from repro.serve.coalescer import CoalescePolicy, Request, next_batch, pad_payloads
+
+__all__ = ["RequestRecord", "ServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """One answered request, with its full timing decomposition."""
+
+    rid: int
+    arrival: float
+    launch: float
+    finish: float
+    batch_size: int
+    result: Any
+
+    @property
+    def queue_wait(self) -> float:
+        return self.launch - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+
+class ServingEngine:
+    """Queue + coalesce + execute + observe, against one route."""
+
+    def __init__(
+        self,
+        route,
+        policy: CoalescePolicy | None = None,
+        *,
+        bus=None,
+        health=None,  # IndexHealthConfig | None — arms the ladder
+    ):
+        from repro.obs.bus import MetricsBus
+
+        self.route = route
+        self.policy = policy or CoalescePolicy()
+        self.bus = bus if bus is not None else MetricsBus()
+        self.monitor = None
+        if health is not None:
+            from repro.health.index_health import IndexHealthMonitor
+
+            self.monitor = IndexHealthMonitor(health, self.bus)
+        self.queue: list[Request] = []
+        self.records: list[RequestRecord] = []
+        self.free_at = 0.0
+        self.batches = 0
+        self._rid = 0
+
+    # -- intake ---------------------------------------------------------
+    def submit(self, payload, arrival: float) -> int:
+        """Enqueue one request at virtual time ``arrival`` (must be
+        non-decreasing across submits — the queue is FIFO)."""
+        if self.queue and arrival < self.queue[-1].arrival:
+            raise ValueError(
+                f"arrival {arrival} < last queued {self.queue[-1].arrival} "
+                "(submit in arrival order)"
+            )
+        rid = self._rid
+        self._rid += 1
+        self.queue.append(Request(rid=rid, payload=payload, arrival=arrival))
+        return rid
+
+    def warmup(self) -> None:
+        """Compile the route's traces (primary AND fallback) before
+        traffic, so no request's latency pays a jit compile."""
+        if hasattr(self.route, "warmup"):
+            self.route.warmup(self.policy.max_batch)
+
+    # -- the loop -------------------------------------------------------
+    def drain(self) -> list[RequestRecord]:
+        """Serve everything queued; returns the new records (appended
+        to ``self.records`` too). Callable repeatedly — the virtual
+        clock (`free_at`) persists, so submit/drain/submit/drain
+        composes into one continuous timeline (the chaos bench corrupts
+        the index between two drains)."""
+        start = len(self.records)
+        while self.queue:
+            self._launch_one()
+        return self.records[start:]
+
+    def _launch_one(self) -> None:
+        size, launch = next_batch(
+            [r.arrival for r in self.queue], self.free_at, self.policy
+        )
+        batch, self.queue = self.queue[:size], self.queue[size:]
+        payloads = pad_payloads(
+            [r.payload for r in batch], self.policy.max_batch,
+            self.route.pad_payload,
+        )
+        with span("serve_batch", batch=self.batches, n=size):
+            with span("serve_prepare", batch=self.batches):
+                prepared = self.route.prepare(payloads)
+            t0 = time.perf_counter()
+            with span("serve_run", batch=self.batches):
+                out = jax.block_until_ready(self.route.run(prepared))
+            service = time.perf_counter() - t0
+        finish = launch + service
+        self.free_at = finish
+        results = self.route.finalize(out, size)
+        for req, result in zip(batch, results):
+            rec = RequestRecord(
+                rid=req.rid, arrival=req.arrival, launch=launch,
+                finish=finish, batch_size=size, result=result,
+            )
+            self.records.append(rec)
+            self.bus.timing("serve_queue_wait", rec.queue_wait, step=req.rid)
+            self.bus.timing("serve_latency", rec.latency, step=req.rid)
+        self.bus.timing("serve_batch_service", service, step=self.batches)
+        self.bus.gauge("serve_batch_size", float(size), step=self.batches)
+        self.bus.gauge(
+            "serve_occupancy", size / self.policy.max_batch, step=self.batches
+        )
+        self.bus.counter("serve_requests", size)
+        self.batches += 1
+        self._maybe_probe()
+        self.bus.drain()
+
+    # -- the degradation ladder ----------------------------------------
+    def _maybe_probe(self) -> None:
+        """Same cadence/verdict/execute split as the trainer's
+        `_maybe_probe_index`: the monitor decides, the route's hooks
+        act. Probing blocks the loop (host-side recall), which is why
+        it is periodic — its cost shows up honestly as engine busy
+        time, not inside any request's service time."""
+        monitor = self.monitor
+        if monitor is None or getattr(self.route, "degraded", False):
+            return
+        ih = monitor.cfg
+        cadence = ih.probe_every if ih.probe_every else 1
+        if self.batches % cadence != 0:
+            return
+        recall = self.route.probe() if ih.probe_every else None
+        overflow = self.route.overflow()
+        action = monitor.observe(recall, overflow)
+        if recall is not None or action:
+            self.bus.event(
+                "index_health",
+                {"step": self.batches, "recall": recall,
+                 "overflow": overflow, "action": action},
+                step=self.batches,
+            )
+        if action in ("compact", "rebuild"):
+            with span(f"index_{action}", batch=self.batches):
+                self.route.heal(action)
+        elif action == "fallback":
+            self.route.degrade()
+
+    # -- summaries ------------------------------------------------------
+    def occupancy(self) -> float:
+        """Mean real rows per launched batch (> 1 means batching won)."""
+        if not self.records:
+            return 0.0
+        return len(self.records) / self.batches
+
+    def latencies(self) -> list[float]:
+        return [r.latency for r in self.records]

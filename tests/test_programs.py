@@ -60,3 +60,32 @@ def test_skip_reasons_documented():
         assert "full-attention" in reason
         mod = get_arch(arch_id)
         assert shape_name in mod.SKIPPED_SHAPES
+
+
+def _decode_cache_specs(arch_id):
+    """Flat list of the 5-dim KV-cache leaf specs of a decode cell."""
+    prog = build_program(arch_id, "decode_32k")
+    cache_arg, cache_spec = prog.args[2], prog.in_specs[2]
+    leaves = zip(
+        jax.tree.leaves(cache_arg),
+        jax.tree.leaves(cache_spec, is_leaf=lambda x: isinstance(x, P)),
+    )
+    return [s for leaf, s in leaves if len(leaf.shape) == 5]
+
+
+def test_gqa_decode_cache_never_shards_head_dim():
+    # gemma2's 4 KV heads can't split the 16-way model axis; the old
+    # auto rule fell back to sharding Dh, which decode's rope
+    # rotate-half turns into a full cache reshard every token. The
+    # decode cells must replicate BOTH head dims instead.
+    for spec in _decode_cache_specs("gemma2-2b"):
+        assert spec[3] is None and spec[4] is None, spec
+
+
+def test_divisible_kv_decode_cache_stays_sharded():
+    # olmoe's 16 KV heads divide the model axis — the override must not
+    # cost it its KV shard (the cache is the decode working set).
+    specs = _decode_cache_specs("olmoe-1b-7b")
+    assert specs, "olmoe decode cell lost its cache leaves"
+    for spec in specs:
+        assert spec[3] == "model" and spec[4] is None, spec

@@ -1,0 +1,262 @@
+"""Cluster serving suite: the multi-replica dispatcher under chaos.
+
+    PYTHONPATH=src python -m benchmarks.cluster            # full sweep
+    PYTHONPATH=src python -m benchmarks.cluster --smoke    # CI chaos drill
+
+Every leg runs the real sasrec MIPS route (N replicas, each with its
+own served-index copy) under a FIXED virtual service time calibrated
+once from a real measured batch — so queue dynamics, routing, retries
+and hedges are exact computations (bitwise-replayable), while the
+service cost is the honest measured model cost, not a made-up number.
+
+Legs, every row in results/BENCH_cluster.json:
+
+  * baseline        N=3, no faults — the p99 yardstick
+  * kill-K-of-N     scripted `ReplicaFaultPlan` death mid-traffic for
+                    K in {1} (smoke) / {1, 2}: the dispatcher re-queues
+                    the dead replica's in-flight batch, marks it dead,
+                    rebalances over survivors. GATES: 100% of submitted
+                    requests answered AND p99 <= INFLATION_MAX x the
+                    no-fault p99.
+  * determinism     the kill-1 drill run twice from scratch — the
+                    reroute/retry event traces must match bitwise
+                    (JSON-serialised equality), which is what makes the
+                    CI chaos drill replayable rather than flaky.
+  * hedge           one slow replica (latency injection), round-robin,
+                    with and without hedged backups — hedging must not
+                    lose (p99 <= no-hedge p99, strictly better when the
+                    slow batches dominate the tail).
+  * timeout (full)  slow replica + per-dispatch deadline: timed-out
+                    batches retry on a different replica with backoff.
+
+The final `cluster_ok` row is the artifact gate the ISSUE names:
+CLUSTER_OK=1 iff every drill answered everything, the trace replayed
+bitwise, and p99 stayed under the stated inflation bound.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from benchmarks import common
+
+# the stated p99 inflation bound for the kill-K-of-N gate: losing
+# replicas costs re-queued batches + backoff + lost parallelism, but a
+# drill that inflates the tail past this is a dispatcher bug, not chaos
+INFLATION_MAX = 3.0
+
+
+def _routes(n: int, rcfg, rparams):
+    """N replicas, each with its OWN served-index copy (built fresh from
+    the shared params — replica state is never shared)."""
+    from repro.serve import RecsysMIPSRoute
+
+    return [RecsysMIPSRoute(rcfg, rparams, k=10) for _ in range(n)]
+
+
+def _calibrate(rcfg, rparams, payloads, max_batch: int) -> float:
+    """One real measured batch -> the fixed virtual service time every
+    drill uses. Calibrated once per process so two runs of the same
+    drill see the SAME clock — the determinism gate depends on it."""
+    from repro.serve import CoalescePolicy, Request, ServingEngine
+
+    eng = ServingEngine(
+        _routes(1, rcfg, rparams)[0],
+        CoalescePolicy(max_batch=max_batch, max_wait_s=0.0),
+    )
+    eng.warmup()
+    batch = [Request(rid=i, payload=p, arrival=0.0)
+             for i, p in enumerate(payloads[:max_batch])]
+    res = eng.serve_batch(batch)
+    return res[0].finish - res[0].launch
+
+
+def _drill(name, n, rcfg, rparams, payloads, arrivals, service_s, *,
+           policy=None, plan=None, max_batch=8, emit=True):
+    """One dispatcher, one arrival schedule -> (dispatcher, result, row)."""
+    from repro.obs.report import percentile
+    from repro.serve import CoalescePolicy, Dispatcher, DispatchPolicy
+
+    disp = Dispatcher(
+        _routes(n, rcfg, rparams),
+        CoalescePolicy(max_batch=max_batch, max_wait_s=0.002),
+        policy or DispatchPolicy(),
+        fault_plan=plan,
+        service_model=lambda measured, batch_no: service_s,
+    )
+    disp.warmup()
+    for p, a in zip(payloads, arrivals):
+        disp.submit(p, a)
+    res = disp.drain()
+    lats = disp.latencies()
+    row = {
+        "answered": len(res),
+        "unanswered": len(res.unanswered),
+        "p50_ms": percentile(lats, 50) * 1e3 if lats else float("inf"),
+        "p99_ms": percentile(lats, 99) * 1e3 if lats else float("inf"),
+        "retries": disp.bus.total("serve_retries"),
+        "hedges": disp.bus.total("serve_hedges"),
+        "deaths": disp.bus.total("serve_replica_deaths"),
+    }
+    if emit:
+        common.emit(
+            name, row["p50_ms"] * 1e3,
+            f"answered={row['answered']}/{len(payloads)};"
+            f"p99_ms={row['p99_ms']:.2f};retries={row['retries']:g};"
+            f"hedges={row['hedges']:g};deaths={row['deaths']:g}",
+        )
+    return disp, res, row
+
+
+def run(smoke: bool = False) -> None:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.health.faults import ReplicaFaultPlan
+    from repro.serve import DispatchPolicy
+
+    rcfg = get_arch("sasrec").SMOKE_CONFIG
+    from repro.models import recsys
+
+    rparams = recsys.init_params(rcfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_req = 48 if smoke else 120
+    n_replicas, max_batch = 3, 8
+    payloads = [
+        rng.integers(-1, rcfg.item_vocab, (rcfg.seq_len,)).astype(np.int32)
+        for _ in range(n_req)
+    ]
+
+    service_s = _calibrate(rcfg, rparams, payloads, max_batch)
+    common.emit("calibrated_service", service_s * 1e6,
+                f"fixed virtual service per batch ({max_batch} rows)")
+
+    # offer at ~half the cluster's capacity: loaded enough that losing a
+    # replica visibly re-queues work, not so loaded the queue diverges
+    qps = 0.5 * n_replicas * max_batch / service_s
+    arrivals = [i / qps for i in range(n_req)]
+    gates = {}
+
+    # -- baseline: no faults --------------------------------------------
+    _, base_res, base = _drill(
+        "baseline_3rep", n_replicas, rcfg, rparams, payloads, arrivals,
+        service_s,
+    )
+    gates["baseline_answered"] = (
+        base["answered"] == n_req and base["unanswered"] == 0
+    )
+
+    # -- kill-K-of-N sweep ----------------------------------------------
+    # replica r dies at its own 3rd dispatch — mid-traffic by
+    # construction (the stream has ~n_req/max_batch ~ 2x that many
+    # batches per replica)
+    kill_ks = (1,) if smoke else (1, 2)
+    for k in kill_ks:
+        plan = ReplicaFaultPlan(die=tuple((r + 1, 3) for r in range(k)))
+        disp, res, row = _drill(
+            f"kill_{k}_of_{n_replicas}", n_replicas, rcfg, rparams,
+            payloads, arrivals, service_s, plan=plan,
+        )
+        inflation = row["p99_ms"] / base["p99_ms"]
+        # the p99 bound is a SURVIVABLE-loss gate: with K=1 the two
+        # survivors still cover the offered load (2/3 capacity vs 1/2
+        # offered). K=N-1 leaves one replica absorbing 1.5x its own
+        # capacity — sustained overload, where the queue (and any
+        # quantile of it) grows with the request count; there the gate
+        # is 100% answered, and inflation is reported informationally.
+        overloaded = 0.5 * n_replicas > (n_replicas - k)  # offered > survivor capacity
+        common.emit(
+            f"kill_{k}_p99_inflation", inflation,
+            f"p99 {row['p99_ms']:.2f}ms vs baseline {base['p99_ms']:.2f}ms "
+            + (f"(bound {INFLATION_MAX:g}x)" if not overloaded
+               else "(overloaded survivors: informational)"),
+        )
+        gates[f"kill_{k}_answered"] = (
+            row["answered"] == n_req and row["unanswered"] == 0
+        )
+        gates[f"kill_{k}_deaths"] = row["deaths"] == k
+        if not overloaded:
+            gates[f"kill_{k}_p99_bounded"] = inflation <= INFLATION_MAX
+
+    # -- determinism: the kill-1 drill, twice, bitwise ------------------
+    traces = []
+    finishes = []
+    for _ in range(2):
+        plan = ReplicaFaultPlan(die=((1, 3),))
+        disp, res, _ = _drill(
+            "determinism_rerun", n_replicas, rcfg, rparams, payloads,
+            arrivals, service_s, plan=plan, emit=False,
+        )
+        traces.append(json.dumps(disp.event_trace(), sort_keys=True))
+        finishes.append([(r.rid, r.replica, r.finish) for r in sorted(
+            disp.records, key=lambda r: r.rid)])
+    gates["trace_bitwise"] = traces[0] == traces[1]
+    gates["records_bitwise"] = finishes[0] == finishes[1]
+    common.emit(
+        "determinism", 1.0 if gates["trace_bitwise"] else 0.0,
+        f"kill-1 reroute trace x2: "
+        f"{'bitwise-identical' if gates['trace_bitwise'] else 'DIVERGED'} "
+        f"({traces[0].count('dispatch')} events)",
+    )
+
+    # -- hedging: one slow replica, with vs without backups -------------
+    slow = ReplicaFaultPlan(slow_from=((0, 1, 4.0 * service_s),))
+    rr = dict(route="round_robin")  # keep pressure on the slow replica
+    _, _, nohedge = _drill(
+        "slow_nohedge", n_replicas, rcfg, rparams, payloads, arrivals,
+        service_s, plan=slow, policy=DispatchPolicy(**rr),
+    )
+    slow2 = ReplicaFaultPlan(slow_from=((0, 1, 4.0 * service_s),))
+    _, _, hedged = _drill(
+        "slow_hedged", n_replicas, rcfg, rparams, payloads, arrivals,
+        service_s, plan=slow2,
+        policy=DispatchPolicy(hedge_after_s=1.5 * service_s, **rr),
+    )
+    common.emit(
+        "hedge_p99_gain", nohedge["p99_ms"] / hedged["p99_ms"],
+        f"slow-replica p99 {nohedge['p99_ms']:.2f}ms -> "
+        f"{hedged['p99_ms']:.2f}ms with hedging ({hedged['hedges']:g} hedges)",
+    )
+    gates["hedge_answered"] = hedged["answered"] == n_req
+    gates["hedge_no_worse"] = hedged["p99_ms"] <= nohedge["p99_ms"] * 1.001
+    gates["hedge_fired"] = hedged["hedges"] > 0
+
+    # -- timeout/retry (full runs only: same machinery, different knob) -
+    if not smoke:
+        slow3 = ReplicaFaultPlan(slow_from=((0, 1, 4.0 * service_s),))
+        _, _, timed = _drill(
+            "slow_timeout_retry", n_replicas, rcfg, rparams, payloads,
+            arrivals, service_s, plan=slow3,
+            policy=DispatchPolicy(timeout_s=2.0 * service_s, max_retries=2, **rr),
+        )
+        gates["timeout_answered"] = timed["answered"] == n_req
+        gates["timeout_retried"] = timed["retries"] > 0
+
+    # -- the artifact gate ----------------------------------------------
+    failed = sorted(name for name, ok in gates.items() if not ok)
+    cluster_ok = 0 if failed else 1
+    common.emit(
+        "cluster_ok", float(cluster_ok),
+        f"gates={len(gates)};failed={','.join(failed) or 'none'};"
+        f"p99_bound={INFLATION_MAX:g}x",
+    )
+    assert cluster_ok == 1, f"cluster gates failed: {failed}"
+    if smoke:
+        print(f"smoke: chaos drill green — {len(gates)} gates, "
+              f"kill-1 answered {n_req}/{n_req}, trace bitwise-stable, "
+              f"p99 inflation bounded by {INFLATION_MAX:g}x")
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    common.EMITTED.clear()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    run(smoke=smoke)
+    common.persist("cluster", list(common.EMITTED), time.time() - t0)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ import sys
 import time
 
 from benchmarks import (
+    cluster,
     common,
     dist_step,
     fused_step,
@@ -49,6 +50,7 @@ SUITES = {
     "guard": guard_overhead.run,  # guarded-step overhead + bitwise parity
     "roofline": roofline.run,
     "serve": serve.run,  # continuous-batching engine vs sequential loop
+    "cluster": cluster.run,  # multi-replica dispatcher chaos drills
 }
 
 

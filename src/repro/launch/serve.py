@@ -16,6 +16,14 @@ leaves metrics.jsonl + trace.json behind for
 `python -m repro.obs.report DIR` (which renders a Serving section).
 `--ladder` arms the retrieval degradation ladder on the live index for
 the MIPS archs (sasrec/dien).
+
+``--replicas N`` (N > 1) serves the same stream through the cluster
+dispatcher instead: N route replicas (each with its own index copy)
+behind least-loaded routing, health checks and bounded retry
+(repro.serve.cluster). ``--chaos`` scripts a replica death mid-traffic
+(kill replica 1 at its 3rd dispatch) — the run must still answer every
+request by re-queuing onto survivors; the summary prints the retry/
+death counters and the per-replica load split.
 """
 from __future__ import annotations
 
@@ -95,9 +103,19 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--ladder", action="store_true",
                     help="arm the retrieval degradation ladder (MIPS archs)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through the cluster dispatcher with N "
+                         "replicas (1 = single engine)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="script a replica death mid-traffic (needs "
+                         "--replicas >= 2)")
     ap.add_argument("--obs-dir", default=None,
                     help="write metrics.jsonl + trace.json here")
     args = ap.parse_args()
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.chaos and args.replicas < 2:
+        raise SystemExit("--chaos needs --replicas >= 2 (survivors must exist)")
     mod = get_arch(args.arch)
     rng = np.random.default_rng(0)
     obs_cfg = ObsConfig(run_dir=args.obs_dir, drift=None) if args.obs_dir else None
@@ -108,29 +126,77 @@ def main() -> None:
             from repro.health.index_health import IndexHealthConfig
 
             health = IndexHealthConfig(probe_every=4, recall_floor=0.5)
-        engine = ServingEngine(
-            route,
-            CoalescePolicy(
-                max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3
-            ),
-            bus=run.bus, health=health,
+        coalesce = CoalescePolicy(
+            max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3
         )
-        engine.warmup()
-        for i in range(args.requests):
-            engine.submit(payload(), arrival=i / args.qps if args.qps else 0.0)
-        records = engine.drain()
-        lats = [r.latency for r in records]
-        makespan = max(r.finish for r in records) - records[0].arrival
-        run.bus.log(
-            f"{cfg.name}: {len(records)} requests in {engine.batches} batches "
-            f"(occupancy {engine.occupancy():.2f}) — p50 "
-            f"{percentile(lats, 50) * 1e3:.1f} ms, p99 "
-            f"{percentile(lats, 99) * 1e3:.1f} ms, "
-            f"{len(records) / makespan:.1f} req/s"
-        )
-        run.bus.drain()
+        if args.replicas > 1:
+            _serve_cluster(args, mod, cfg, route, payload, coalesce, health,
+                           run, rng, percentile)
+        else:
+            engine = ServingEngine(route, coalesce, bus=run.bus, health=health)
+            engine.warmup()
+            for i in range(args.requests):
+                engine.submit(payload(), arrival=i / args.qps if args.qps else 0.0)
+            records = engine.drain()
+            lats = [r.latency for r in records]
+            makespan = max(r.finish for r in records) - records[0].arrival
+            run.bus.log(
+                f"{cfg.name}: {len(records)} requests in {engine.batches} "
+                f"batches (occupancy {engine.occupancy():.2f}) — p50 "
+                f"{percentile(lats, 50) * 1e3:.1f} ms, p99 "
+                f"{percentile(lats, 99) * 1e3:.1f} ms, "
+                f"{len(records) / makespan:.1f} req/s"
+            )
+            run.bus.drain()
     if args.obs_dir:
         print(f"obs artifacts in {args.obs_dir}")
+
+
+def _serve_cluster(args, mod, cfg, first_route, payload, coalesce, health,
+                   run, rng, percentile) -> None:
+    """The --replicas > 1 path: N route copies behind the dispatcher."""
+    from repro.health.faults import ReplicaFaultPlan
+    from repro.serve import Dispatcher, DispatchPolicy
+
+    routes = [first_route]
+    for _ in range(args.replicas - 1):
+        _, route, _ = build_route(mod, args, rng)
+        routes.append(route)
+    # kill replica 1 at its FIRST dispatch — least-loaded routing
+    # guarantees it gets one (measured service times make later dispatch
+    # counts run-dependent) — and mark dead on the first failure: the
+    # CLI drill is a demonstration, not a flap-tolerance test
+    plan = ReplicaFaultPlan(die=((1, 1),)) if args.chaos else None
+    policy = DispatchPolicy(max_failures=1) if args.chaos else DispatchPolicy()
+    disp = Dispatcher(
+        routes, coalesce, policy, bus=run.bus, health=health,
+        fault_plan=plan,
+    )
+    disp.warmup()
+    for i in range(args.requests):
+        disp.submit(payload(), arrival=i / args.qps if args.qps else 0.0)
+    res = disp.drain()
+    lats = disp.latencies()
+    split = ", ".join(
+        f"r{r['replica']}:{r['requests']}{'' if r['alive'] else ' (dead)'}"
+        for r in disp.per_replica()
+    )
+    run.bus.log(
+        f"{cfg.name} x{args.replicas} replicas"
+        f"{' [chaos: kill replica 1]' if args.chaos else ''}: "
+        f"{len(res)} answered / {len(res.unanswered)} unanswered — p50 "
+        f"{percentile(lats, 50) * 1e3:.1f} ms, p99 "
+        f"{percentile(lats, 99) * 1e3:.1f} ms; retries "
+        f"{disp.bus.total('serve_retries'):g}, deaths "
+        f"{disp.bus.total('serve_replica_deaths'):g}, rebalances "
+        f"{disp.bus.total('serve_rebalances'):g}; load [{split}]"
+    )
+    run.bus.drain()
+    if args.chaos and res.unanswered:
+        raise SystemExit(
+            f"chaos run dropped {len(res.unanswered)} requests — the "
+            "re-queue path must answer everything with survivors up"
+        )
 
 
 if __name__ == "__main__":

@@ -19,6 +19,8 @@ from repro.obs.run import METRICS_FILE
 from repro.obs.schema import (
     EVENT_KEYS,
     SERIES_KEYS,
+    SERVE_CLUSTER_COUNTER_KEYS,
+    SERVE_CLUSTER_TIMING_KEYS,
     SERVE_GAUGE_KEYS,
     SERVE_TIMING_KEYS,
 )
@@ -138,6 +140,57 @@ def render(records: list[dict], title: str = "Run report") -> str:
             pcts = " | ".join(f"{percentile(vs, p) * 1e3:.3g}" for p in PCTS)
             lines.append(f"| {name} | {len(vs)} | {pcts} | {max(vs) * 1e3:.3g} |")
         lines.append("")
+
+    # -- cluster --------------------------------------------------------
+    cluster_t: dict[str, list[float]] = {}
+    counters: dict[str, float] = {}
+    replicas: dict[int, dict[str, float]] = {}
+    for r in records:
+        name, kind = r.get("name"), r.get("kind")
+        if kind == "timing" and name in SERVE_CLUSTER_TIMING_KEYS:
+            cluster_t.setdefault(name, []).append(r["value"])
+        elif kind == "counter" and name in SERVE_CLUSTER_COUNTER_KEYS:
+            counters[name] = counters.get(name, 0.0) + r["value"]
+        rep = (r.get("labels") or {}).get("replica")
+        if rep is not None and kind in ("gauge", "timing", "counter"):
+            slot = replicas.setdefault(int(rep), {"batches": 0, "requests": 0})
+            if name == "serve_batch_size":
+                slot["batches"] += 1
+                slot["requests"] += int(r["value"])
+            elif name == "serve_abandoned":
+                slot["abandoned"] = slot.get("abandoned", 0) + int(r["value"])
+    if cluster_t or replicas:
+        lines += ["## Cluster", ""]
+        if counters:
+            lines += ["| counter | total |", "|---|---|"]
+            for name in SERVE_CLUSTER_COUNTER_KEYS:
+                if name in counters:
+                    lines.append(f"| {name} | {counters[name]:g} |")
+            lines.append("")
+        if cluster_t:
+            header = (
+                "| metric (ms) | n | " + " | ".join(f"p{p}" for p in PCTS) + " | max |"
+            )
+            lines += [header, "|---|---|" + "---|" * (len(PCTS) + 1)]
+            for name, label in (
+                ("serve_cluster_latency", "cluster e2e latency"),
+                ("serve_cluster_queue_wait", "cluster queue wait"),
+            ):
+                vs = cluster_t.get(name)
+                if not vs:
+                    continue
+                pcts = " | ".join(f"{percentile(vs, p) * 1e3:.3g}" for p in PCTS)
+                lines.append(f"| {label} | {len(vs)} | {pcts} | {max(vs) * 1e3:.3g} |")
+            lines.append("")
+        if replicas:
+            lines += ["| replica | batches | requests | abandoned |", "|---|---|---|---|"]
+            for rep in sorted(replicas):
+                slot = replicas[rep]
+                lines.append(
+                    f"| {rep} | {slot['batches']} | {slot['requests']} | "
+                    f"{slot.get('abandoned', 0)} |"
+                )
+            lines.append("")
 
     # -- index ladder ---------------------------------------------------
     probes = events.get("index_health", [])

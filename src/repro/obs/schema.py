@@ -23,6 +23,8 @@ __all__ = [
     "HISTORY_SCHEMA",
     "SCALAR_KEYS",
     "SERIES_KEYS",
+    "SERVE_CLUSTER_COUNTER_KEYS",
+    "SERVE_CLUSTER_TIMING_KEYS",
     "SERVE_GAUGE_KEYS",
     "SERVE_TIMING_KEYS",
     "empty_history",
@@ -58,6 +60,26 @@ SCALAR_KEYS = tuple(k for k, (kind, _) in HISTORY_SCHEMA.items() if kind == "sca
 # here so the report renderer and tests share one source of truth.
 SERVE_TIMING_KEYS = ("serve_queue_wait", "serve_latency", "serve_batch_service")
 SERVE_GAUGE_KEYS = ("serve_batch_size", "serve_occupancy")
+
+# Cluster-dispatcher metrics (repro.serve.cluster) — bus-only, like the
+# engine keys above. Counters tell the chaos story (how many dispatches
+# were retried/hedged/timed out, how many replicas died, how often the
+# stream rebalanced or a respawn was re-admitted); the timings are the
+# END-TO-END cluster view of a request (original arrival -> winning
+# finish, retries and backoff included), as opposed to the engine's
+# per-attempt serve_latency.
+SERVE_CLUSTER_COUNTER_KEYS = (
+    "serve_requests",
+    "serve_abandoned",
+    "serve_retries",
+    "serve_hedges",
+    "serve_timeouts",
+    "serve_deadline_misses",
+    "serve_replica_deaths",
+    "serve_rebalances",
+    "serve_readmissions",
+)
+SERVE_CLUSTER_TIMING_KEYS = ("serve_cluster_latency", "serve_cluster_queue_wait")
 
 
 def empty_history() -> dict:

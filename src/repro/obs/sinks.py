@@ -51,12 +51,30 @@ class RingSink:
 class JSONLSink:
     """Appends one JSON line per record to ``path`` (parent dirs
     created). Non-serialisable payload leaves degrade to their repr
-    instead of poisoning the stream."""
+    instead of poisoning the stream.
 
-    def __init__(self, path: str):
+    Writes retry with exponential backoff (same treatment checkpoint
+    saves got): a transient IO failure — disk hiccup, rotated file,
+    NFS blip — must not kill a serving process mid-traffic. Between
+    attempts the file handle is reopened (append mode, so survivors of
+    an earlier flush are kept). After ``retries`` consecutive failures
+    the sink disarms itself (``self._f = None``) and warns on stderr:
+    dropped telemetry beats a dead dispatcher."""
+
+    def __init__(self, path: str, retries: int = 3, backoff: float = 0.05):
         self.path = path
+        self.retries = retries
+        self.backoff = backoff
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._f: IO[str] | None = open(path, "a")
+
+    def _reopen(self) -> None:
+        try:
+            if self._f is not None:
+                self._f.close()
+        except OSError:
+            pass
+        self._f = open(self.path, "a")
 
     def emit(self, record: dict) -> None:
         if self._f is None:
@@ -65,12 +83,32 @@ class JSONLSink:
             line = json.dumps(record)
         except TypeError:
             line = json.dumps({**record, "value": repr(record.get("value"))})
-        self._f.write(line + "\n")
+        for attempt in range(self.retries + 1):
+            try:
+                self._f.write(line + "\n")
+                return
+            except (OSError, ValueError):  # ValueError: write to closed file
+                if attempt == self.retries:
+                    break
+                time.sleep(self.backoff * (2**attempt))
+                try:
+                    self._reopen()
+                except OSError:
+                    continue
+        print(
+            f"JSONLSink: dropping telemetry after {self.retries + 1} failed "
+            f"writes to {self.path}; sink disarmed",
+            file=sys.stderr,
+        )
+        self._f = None
 
     def close(self) -> None:
         if self._f is not None:
-            self._f.flush()
-            self._f.close()
+            try:
+                self._f.flush()
+                self._f.close()
+            except (OSError, ValueError):
+                pass
             self._f = None
 
 

@@ -6,17 +6,30 @@ the PR-7 degradation ladder on the live index and PR-8 telemetry on
 every request. See `repro.launch.serve` for the CLI and
 `benchmarks.serve` for the latency/throughput suite.
 """
+from repro.serve.cluster import (
+    ClusterRecord,
+    ClusterResult,
+    Dispatcher,
+    DispatchPolicy,
+    Replica,
+)
 from repro.serve.coalescer import CoalescePolicy, Request, next_batch, pad_payloads
-from repro.serve.engine import RequestRecord, ServingEngine
+from repro.serve.engine import DrainResult, RequestRecord, ServingEngine
 from repro.serve.planner import QueryPlanner
 from repro.serve.routes import DenseCandidateRoute, LMGenerateRoute, RecsysMIPSRoute
 
 __all__ = [
+    "ClusterRecord",
+    "ClusterResult",
     "CoalescePolicy",
     "DenseCandidateRoute",
+    "DispatchPolicy",
+    "Dispatcher",
+    "DrainResult",
     "LMGenerateRoute",
     "QueryPlanner",
     "RecsysMIPSRoute",
+    "Replica",
     "Request",
     "RequestRecord",
     "ServingEngine",

@@ -69,6 +69,17 @@ def next_batch(
     """
     if not arrivals:
         raise ValueError("next_batch on an empty queue")
+    if any(a > b for a, b in zip(arrivals, arrivals[1:])):
+        # every launch-time formula below indexes arrivals[0] as "the
+        # oldest" — on an unsorted queue that silently computes a wrong
+        # launch. The cluster dispatcher's re-queue path produces
+        # out-of-order ready times; queue owners must re-insert in
+        # sorted position (bisect), not append.
+        raise ValueError(
+            "next_batch needs non-decreasing arrivals (FIFO by arrival); "
+            "re-queued requests must be re-inserted in sorted position, "
+            "not appended"
+        )
     t_full = (
         arrivals[policy.max_batch - 1]
         if len(arrivals) >= policy.max_batch

@@ -9,16 +9,36 @@ That split makes offered-QPS latency sweeps exact and reproducible
 (queue dynamics are computed, not raced against the host scheduler)
 while every latency still contains the true model cost.
 
+An optional ``service_model`` replaces the measured wall time with a
+modelled virtual service time — ``(measured_s, batch_no) -> virtual_s``.
+The cluster layer uses it for two things: injecting a chaos plan's
+slow-replica latency, and pinning a FIXED per-batch cost so a whole
+chaos drill (routing, retries, hedges, timestamps) is bitwise
+reproducible across runs.
+
+The batch entry point is `serve_batch` — serve exactly this list of
+requests now — which `drain`'s queue loop is built on and which the
+cluster dispatcher calls directly (its replicas never own a queue; the
+dispatcher shards one global stream). A `ReplicaFailure` raised by the
+route answers nothing: the batch comes back in `DrainResult.abandoned`
+with the failure attached, never silently lost — the cluster's re-queue
+logic feeds on exactly that signal.
+
 Telemetry (repro.obs bus, drained once per batch — the same
 record-then-drain discipline as the trainer):
 
     serve_queue_wait     timing, per request (launch - arrival)
     serve_latency        timing, per request (finish - arrival)
-    serve_batch_service  timing, per batch (measured model wall time)
+    serve_batch_service  timing, per batch (virtual service time)
     serve_batch_size     gauge, per batch (real rows in the pad)
     serve_occupancy      gauge, per batch (real rows / max_batch)
     serve_requests       counter
+    serve_abandoned      counter, requests a failed dispatch returned
     index_health         events, when the degradation ladder is armed
+
+Engines owned by a cluster replica carry a ``labels={"replica": i}``
+tag on every record, so per-replica occupancy/queue-wait series fall
+out of the one shared bus.
 
 The ladder rides exactly as in the trainer: an `IndexHealthConfig`
 arms an `IndexHealthMonitor`; every ``probe_every`` batches the route's
@@ -31,14 +51,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
+from typing import Any, Callable
 
 import jax
 
+from repro.health.faults import ReplicaFailure
 from repro.obs.trace import span
 from repro.serve.coalescer import CoalescePolicy, Request, next_batch, pad_payloads
 
-__all__ = ["RequestRecord", "ServingEngine"]
+__all__ = ["DrainResult", "RequestRecord", "ServingEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +82,24 @@ class RequestRecord:
         return self.finish - self.arrival
 
 
+class DrainResult(list):
+    """The records a drain/serve call answered — a plain list of
+    `RequestRecord`s (so existing callers keep indexing/len'ing it) —
+    plus the requests it could NOT answer, explicit instead of invisible:
+
+    abandoned   `Request`s a failed dispatch returned unanswered (the
+                in-flight batch of a dead replica, plus everything still
+                queued when `drain` stopped). The cluster dispatcher
+                re-queues these onto surviving replicas.
+    failure     the `ReplicaFailure` that stopped serving, or None.
+    """
+
+    def __init__(self, records=(), abandoned=(), failure=None):
+        super().__init__(records)
+        self.abandoned: list[Request] = list(abandoned)
+        self.failure = failure
+
+
 class ServingEngine:
     """Queue + coalesce + execute + observe, against one route."""
 
@@ -71,12 +110,16 @@ class ServingEngine:
         *,
         bus=None,
         health=None,  # IndexHealthConfig | None — arms the ladder
+        service_model: Callable[[float, int], float] | None = None,
+        labels: dict | None = None,
     ):
         from repro.obs.bus import MetricsBus
 
         self.route = route
         self.policy = policy or CoalescePolicy()
         self.bus = bus if bus is not None else MetricsBus()
+        self.service_model = service_model
+        self.labels = dict(labels or {})
         self.monitor = None
         if health is not None:
             from repro.health.index_health import IndexHealthMonitor
@@ -109,53 +152,100 @@ class ServingEngine:
             self.route.warmup(self.policy.max_batch)
 
     # -- the loop -------------------------------------------------------
-    def drain(self) -> list[RequestRecord]:
+    def drain(self) -> DrainResult:
         """Serve everything queued; returns the new records (appended
         to ``self.records`` too). Callable repeatedly — the virtual
         clock (`free_at`) persists, so submit/drain/submit/drain
         composes into one continuous timeline (the chaos bench corrupts
-        the index between two drains)."""
-        start = len(self.records)
-        while self.queue:
-            self._launch_one()
-        return self.records[start:]
+        the index between two drains).
 
-    def _launch_one(self) -> None:
+        If the route fails a dispatch (`ReplicaFailure`), serving stops
+        and EVERY unanswered request — the failed batch and the rest of
+        the queue — is reported in ``DrainResult.abandoned`` instead of
+        rotting invisibly; single-replica callers can re-submit, the
+        cluster dispatcher re-queues onto survivors."""
+        out = DrainResult()
+        while self.queue:
+            res = self._launch_one()
+            out.extend(res)
+            out.abandoned.extend(res.abandoned)
+            if res.failure is not None:
+                out.failure = res.failure
+                out.abandoned.extend(self.queue)
+                self.queue = []
+        return out
+
+    def _launch_one(self) -> DrainResult:
         size, launch = next_batch(
             [r.arrival for r in self.queue], self.free_at, self.policy
         )
         batch, self.queue = self.queue[:size], self.queue[size:]
-        payloads = pad_payloads(
-            [r.payload for r in batch], self.policy.max_batch,
-            self.route.pad_payload,
+        return self.serve_batch(batch, launch)
+
+    def serve_batch(self, batch: list[Request], not_before: float = 0.0) -> DrainResult:
+        """Serve exactly ``batch`` (bypassing the queue) at virtual time
+        ``max(free_at, not_before, latest arrival)`` — the cluster
+        dispatcher's entry point; the queue loop routes through here
+        too. On `ReplicaFailure` nothing is answered: the batch comes
+        back in ``.abandoned`` and the virtual clock does not advance
+        (the replica never did the work)."""
+        if not batch:
+            return DrainResult()
+        size = len(batch)
+        launch = max(self.free_at, not_before, max(r.arrival for r in batch))
+        try:
+            payloads = pad_payloads(
+                [r.payload for r in batch], self.policy.max_batch,
+                self.route.pad_payload,
+            )
+            with span("serve_batch", batch=self.batches, n=size):
+                with span("serve_prepare", batch=self.batches):
+                    prepared = self.route.prepare(payloads)
+                t0 = time.perf_counter()
+                with span("serve_run", batch=self.batches):
+                    out = jax.block_until_ready(self.route.run(prepared))
+                measured = time.perf_counter() - t0
+        except ReplicaFailure as exc:
+            self.bus.counter("serve_abandoned", size, **self.labels)
+            self.bus.drain()
+            return DrainResult([], abandoned=batch, failure=exc)
+        service = (
+            measured
+            if self.service_model is None
+            else float(self.service_model(measured, self.batches))
         )
-        with span("serve_batch", batch=self.batches, n=size):
-            with span("serve_prepare", batch=self.batches):
-                prepared = self.route.prepare(payloads)
-            t0 = time.perf_counter()
-            with span("serve_run", batch=self.batches):
-                out = jax.block_until_ready(self.route.run(prepared))
-            service = time.perf_counter() - t0
         finish = launch + service
         self.free_at = finish
         results = self.route.finalize(out, size)
+        recs = []
         for req, result in zip(batch, results):
             rec = RequestRecord(
                 rid=req.rid, arrival=req.arrival, launch=launch,
                 finish=finish, batch_size=size, result=result,
             )
+            recs.append(rec)
             self.records.append(rec)
-            self.bus.timing("serve_queue_wait", rec.queue_wait, step=req.rid)
-            self.bus.timing("serve_latency", rec.latency, step=req.rid)
-        self.bus.timing("serve_batch_service", service, step=self.batches)
-        self.bus.gauge("serve_batch_size", float(size), step=self.batches)
-        self.bus.gauge(
-            "serve_occupancy", size / self.policy.max_batch, step=self.batches
+            self.bus.timing(
+                "serve_queue_wait", rec.queue_wait, step=req.rid, **self.labels
+            )
+            self.bus.timing(
+                "serve_latency", rec.latency, step=req.rid, **self.labels
+            )
+        self.bus.timing(
+            "serve_batch_service", service, step=self.batches, **self.labels
         )
-        self.bus.counter("serve_requests", size)
+        self.bus.gauge(
+            "serve_batch_size", float(size), step=self.batches, **self.labels
+        )
+        self.bus.gauge(
+            "serve_occupancy", size / self.policy.max_batch,
+            step=self.batches, **self.labels,
+        )
+        self.bus.counter("serve_requests", size, **self.labels)
         self.batches += 1
         self._maybe_probe()
         self.bus.drain()
+        return DrainResult(recs)
 
     # -- the degradation ladder ----------------------------------------
     def _maybe_probe(self) -> None:

@@ -1,0 +1,444 @@
+"""Cluster dispatcher tests: routing, retry/timeout/hedging, replica
+death + re-admission, trace determinism — plus the coalescer/engine
+satellite fixes the dispatcher is built on (non-monotonic arrival
+validation, explicit abandoned-request reporting) and hypothesis
+property tests for the coalescer invariants.
+
+Most tests run a FakeRoute (pure host lists, no model, fixed virtual
+service) so the chaos logic is exercised in milliseconds; one drill
+runs the real sasrec MIPS route end to end.
+"""
+import pytest
+
+from repro.health.faults import ReplicaDeath, ReplicaFailure, ReplicaFaultPlan
+from repro.serve import (
+    CoalescePolicy,
+    Dispatcher,
+    DispatchPolicy,
+    Request,
+    ServingEngine,
+    next_batch,
+)
+
+
+class FakeRoute:
+    """Identity route: payloads in, payloads out, zero model cost."""
+
+    pad_payload = 0
+
+    def prepare(self, payloads):
+        return payloads
+
+    def run(self, prepared):
+        return prepared
+
+    def finalize(self, out, size):
+        return out[:size]
+
+
+SERVICE = 0.010  # fixed virtual seconds per batch
+
+
+def build(n=3, plan=None, policy=None, max_batch=4):
+    return Dispatcher(
+        [FakeRoute() for _ in range(n)],
+        CoalescePolicy(max_batch=max_batch, max_wait_s=0.002),
+        policy or DispatchPolicy(),
+        fault_plan=plan,
+        service_model=lambda measured, batch_no: SERVICE,
+    )
+
+
+def offer(disp, n, spacing=0.001):
+    for i in range(n):
+        disp.submit(i, i * spacing)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_clean_run_answers_all_and_spreads_load():
+    disp = build()
+    offer(disp, 24)
+    res = disp.drain()
+    assert len(res) == 24 and not res.unanswered
+    assert sorted(r.rid for r in res) == list(range(24))
+    loads = [r["requests"] for r in disp.per_replica()]
+    assert all(n > 0 for n in loads), f"least-loaded left a replica idle: {loads}"
+    # cluster latency truth: finish - ORIGINAL arrival >= one service
+    assert all(r.latency >= SERVICE - 1e-9 for r in res)
+
+
+def test_round_robin_cycles_replicas():
+    disp = build(policy=DispatchPolicy(route="round_robin"))
+    offer(disp, 24)
+    disp.drain()
+    replicas = [e["replica"] for e in disp.events if e["kind"] == "dispatch"]
+    assert replicas[:3] == [0, 1, 2] and set(replicas) == {0, 1, 2}
+
+
+def test_submit_rejects_decreasing_arrivals():
+    disp = build()
+    disp.submit(0, 1.0)
+    with pytest.raises(ValueError, match="arrival order"):
+        disp.submit(1, 0.5)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="route"):
+        DispatchPolicy(route="random")
+    with pytest.raises(ValueError, match="timeout_s"):
+        DispatchPolicy(timeout_s=0.0)
+    with pytest.raises(ValueError, match="hedge_quantile"):
+        DispatchPolicy(hedge_quantile=10.0)
+    with pytest.raises(ValueError, match="max_failures"):
+        DispatchPolicy(max_failures=0)
+
+
+# ---------------------------------------------------------------------------
+# replica death
+# ---------------------------------------------------------------------------
+
+def test_replica_death_requeues_and_answers_everything():
+    plan = ReplicaFaultPlan(die=((1, 2),))
+    disp = build(plan=plan)
+    offer(disp, 24)
+    res = disp.drain()
+    assert len(res) == 24 and not res.unanswered
+    assert disp.bus.total("serve_replica_deaths") == 1
+    assert disp.bus.total("serve_rebalances") == 1
+    assert not disp.replicas[1].alive
+    kinds = [e["kind"] for e in disp.events]
+    assert "requeue" in kinds and "death" in kinds and "rebalance" in kinds
+    # the dead replica's in-flight requests were answered elsewhere
+    dead_rids = next(
+        e["rids"] for e in disp.events if e["kind"] == "requeue"
+    )
+    winners = {r.rid: r.replica for r in res}
+    assert all(winners[rid] != 1 for rid in dead_rids)
+
+
+def test_death_does_not_burn_retry_budget():
+    # max_retries=0: a timeout would be accepted immediately, but a death
+    # must STILL be re-dispatched — no answer exists to accept
+    plan = ReplicaFaultPlan(die=((0, 1),))
+    disp = build(plan=plan, policy=DispatchPolicy(max_retries=0, max_failures=1))
+    offer(disp, 8)
+    res = disp.drain()
+    assert len(res) == 8 and not res.unanswered
+    assert all(r.replica != 0 for r in res)
+
+
+def test_total_outage_reports_unanswered():
+    plan = ReplicaFaultPlan(die=((0, 1), (1, 1), (2, 1)))
+    disp = build(
+        plan=plan, policy=DispatchPolicy(max_failures=1, health_every=0)
+    )
+    offer(disp, 8)
+    res = disp.drain()
+    assert len(res) == 0
+    assert len(res.unanswered) == 8
+    assert all(isinstance(r, Request) for r in res.unanswered)
+    assert any(e["kind"] == "outage" for e in disp.events)
+
+
+def test_trace_is_bitwise_deterministic():
+    def one_run():
+        disp = build(plan=ReplicaFaultPlan(die=((1, 2),)))
+        offer(disp, 24)
+        disp.drain()
+        return disp.event_trace(), [
+            (r.rid, r.replica, r.launch, r.finish) for r in disp.records
+        ]
+
+    t1, r1 = one_run()
+    t2, r2 = one_run()
+    assert t1 == t2
+    assert r1 == r2
+
+
+# ---------------------------------------------------------------------------
+# timeout / retry / hedging
+# ---------------------------------------------------------------------------
+
+def test_timeout_retries_on_other_replica_with_backoff():
+    plan = ReplicaFaultPlan(slow_from=((0, 1, 5 * SERVICE),))
+    disp = build(
+        plan=plan, policy=DispatchPolicy(timeout_s=2 * SERVICE, max_retries=2)
+    )
+    offer(disp, 8)
+    res = disp.drain()
+    assert len(res) == 8 and not res.unanswered
+    assert disp.bus.total("serve_timeouts") > 0
+    assert disp.bus.total("serve_retries") > 0
+    retried = [e for e in disp.events if e["kind"] == "retry"]
+    assert retried and all(e["excluded"] == 0 for e in retried)
+    # the retried requests won on a different replica
+    retried_rids = {e["rid"] for e in retried}
+    winners = {r.rid: r.replica for r in res}
+    assert all(winners[rid] != 0 for rid in retried_rids)
+
+
+def test_exhausted_retries_accept_slow_answer():
+    # EVERY replica slow: retries burn out, the slow answer is accepted —
+    # late beats never, flagged as a deadline miss
+    plan = ReplicaFaultPlan(
+        slow_from=tuple((r, 1, 5 * SERVICE) for r in range(3))
+    )
+    disp = build(
+        plan=plan, policy=DispatchPolicy(timeout_s=2 * SERVICE, max_retries=1)
+    )
+    offer(disp, 8)
+    res = disp.drain()
+    assert len(res) == 8 and not res.unanswered
+    assert disp.bus.total("serve_deadline_misses") == 8
+    assert all(r.deadline_missed for r in res)
+
+
+def test_hedge_fires_and_first_answer_wins():
+    plan = ReplicaFaultPlan(slow_from=((0, 1, 5 * SERVICE),))
+    disp = build(
+        plan=plan,
+        policy=DispatchPolicy(route="round_robin", hedge_after_s=2 * SERVICE),
+    )
+    offer(disp, 12)
+    res = disp.drain()
+    assert len(res) == 12 and not res.unanswered
+    assert disp.bus.total("serve_hedges") > 0
+    wins = [e for e in disp.events if e["kind"] == "hedge_win"]
+    assert wins
+    # every hedged batch that launched on the slow replica was won by the
+    # backup (its virtual service is 6x the healthy one)
+    hedged_off_0 = [
+        e for e in disp.events if e["kind"] == "hedge" and e["primary"] == 0
+    ]
+    assert hedged_off_0
+    win_by_rids = {tuple(e["rids"]): e["replica"] for e in wins}
+    assert all(win_by_rids[tuple(e["rids"])] != 0 for e in hedged_off_0)
+
+
+def test_hedge_quantile_arms_after_min_obs():
+    disp = build(
+        policy=DispatchPolicy(hedge_quantile=99.0, hedge_min_obs=4)
+    )
+    assert disp._hedge_delay() is None  # not armed yet
+    offer(disp, 24)
+    disp.drain()
+    assert disp._hedge_delay() == pytest.approx(SERVICE)
+
+
+# ---------------------------------------------------------------------------
+# health checks: flaky probes, death by probe, re-admission
+# ---------------------------------------------------------------------------
+
+def test_one_flaky_probe_does_not_kill_a_healthy_replica():
+    plan = ReplicaFaultPlan(flaky_probe_at=((1, 1),))
+    disp = build(plan=plan, policy=DispatchPolicy(max_failures=2, health_every=2))
+    offer(disp, 24)
+    res = disp.drain()
+    assert len(res) == 24
+    assert all(r.alive for r in disp.replicas)
+    assert disp.bus.total("serve_replica_deaths") == 0
+    assert any(e["kind"] == "probe_fail" for e in disp.events)
+
+
+def test_probe_death_then_readmission():
+    # max_failures=1: the check-1 lie kills replica 1 outright; its
+    # check-2 probe passes -> re-admitted and serving again. (With
+    # max_failures > 1 a lie between successful dispatches never kills:
+    # a served batch proves liveness and resets the failure count.)
+    plan = ReplicaFaultPlan(flaky_probe_at=((1, 1),))
+    disp = build(plan=plan, policy=DispatchPolicy(max_failures=1, health_every=1))
+    offer(disp, 40)
+    res = disp.drain()
+    assert len(res) == 40
+    assert disp.bus.total("serve_replica_deaths") == 1
+    assert disp.bus.total("serve_readmissions") == 1
+    assert disp.replicas[1].alive
+    kinds = [e["kind"] for e in disp.events]
+    assert kinds.index("death") < kinds.index("readmit")
+
+
+def test_dead_replica_revives_after_warmup_probe():
+    plan = ReplicaFaultPlan(die=((1, 1),), revive_at=((1, 6),))
+    disp = build(
+        plan=plan, policy=DispatchPolicy(max_failures=1, health_every=1)
+    )
+    offer(disp, 60)
+    res = disp.drain()
+    assert len(res) == 60 and not res.unanswered
+    assert disp.bus.total("serve_replica_deaths") == 1
+    assert disp.bus.total("serve_readmissions") == 1
+    assert disp.replicas[1].alive
+    # it took traffic again after the readmit
+    readmit_idx = next(
+        i for i, e in enumerate(disp.events) if e["kind"] == "readmit"
+    )
+    later = [
+        e for e in disp.events[readmit_idx:]
+        if e["kind"] == "dispatch" and e["replica"] == 1
+    ]
+    assert later, "re-admitted replica never took traffic again"
+
+
+# ---------------------------------------------------------------------------
+# engine satellites: serve_batch failure path + explicit abandoned
+# ---------------------------------------------------------------------------
+
+class DyingRoute(FakeRoute):
+    def __init__(self, die_on_call=1):
+        self.calls = 0
+        self.die_on_call = die_on_call
+
+    def prepare(self, payloads):
+        self.calls += 1
+        if self.calls >= self.die_on_call:
+            raise ReplicaDeath(0, self.calls)
+        return payloads
+
+
+def test_serve_batch_reports_abandoned_and_clock_holds():
+    eng = ServingEngine(DyingRoute(), CoalescePolicy(max_batch=4))
+    batch = [Request(rid=i, payload=i, arrival=0.0) for i in range(3)]
+    res = eng.serve_batch(batch)
+    assert len(res) == 0
+    assert [r.rid for r in res.abandoned] == [0, 1, 2]
+    assert isinstance(res.failure, ReplicaFailure)
+    assert eng.free_at == 0.0  # the replica never did the work
+    assert eng.bus.total("serve_abandoned") == 3
+
+
+def test_drain_reports_queued_requests_on_failure():
+    # dies on the SECOND batch: first answers, the failed batch AND the
+    # still-queued rest come back in .abandoned — nothing rots invisibly
+    eng = ServingEngine(
+        DyingRoute(die_on_call=2),
+        CoalescePolicy(max_batch=2, max_wait_s=0.0),
+        service_model=lambda m, b: SERVICE,
+    )
+    for i in range(6):
+        eng.submit(i, 0.0)
+    res = eng.drain()
+    assert [r.rid for r in res] == [0, 1]
+    assert [r.rid for r in res.abandoned] == [2, 3, 4, 5]
+    assert res.failure is not None
+    assert not eng.queue
+
+
+def test_non_replica_failure_propagates():
+    class BuggyRoute(FakeRoute):
+        def prepare(self, payloads):
+            raise RuntimeError("an actual bug")
+
+    eng = ServingEngine(BuggyRoute(), CoalescePolicy(max_batch=2))
+    with pytest.raises(RuntimeError, match="an actual bug"):
+        eng.serve_batch([Request(rid=0, payload=0, arrival=0.0)])
+
+
+# ---------------------------------------------------------------------------
+# coalescer satellite: non-monotonic arrivals + property tests
+# ---------------------------------------------------------------------------
+
+def test_next_batch_rejects_unsorted_arrivals():
+    pol = CoalescePolicy(max_batch=4, max_wait_s=0.002)
+    with pytest.raises(ValueError, match="non-decreasing"):
+        next_batch([0.0, 0.5, 0.3], free_at=0.0, policy=pol)
+    # equal timestamps are fine (simultaneous arrivals)
+    size, _ = next_batch([0.1, 0.1, 0.1], free_at=0.0, policy=pol)
+    assert size == 3
+
+
+# property tests guard per-test (not module importorskip: the rest of
+# this file must run without hypothesis — CI installs it, the dev
+# container may not)
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
+
+if hypothesis is not None:
+    arrivals_st = st.lists(
+        st.floats(0.0, 10.0, allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=40,
+    ).map(sorted)
+    policy_st = st.builds(
+        CoalescePolicy,
+        max_batch=st.integers(1, 16),
+        max_wait_s=st.floats(0.0, 0.05, allow_nan=False),
+    )
+
+    @hypothesis.given(
+        arrivals=arrivals_st,
+        free_at=st.floats(0.0, 20.0, allow_nan=False),
+        policy=policy_st,
+    )
+    @hypothesis.settings(deadline=None, max_examples=200)
+    def test_coalescer_invariants(arrivals, free_at, policy):
+        size, launch = next_batch(arrivals, free_at, policy)
+        # a non-empty queue always launches something, within max_batch
+        assert 1 <= size <= policy.max_batch
+        # never launch before the engine is free or the oldest arrival
+        assert launch >= max(free_at, arrivals[0])
+        # everything included had arrived by launch (no time travel)
+        assert all(a <= launch for a in arrivals[:size])
+        # once the engine is free, the oldest waits at most max_wait_s
+        assert launch <= max(free_at, arrivals[0] + policy.max_wait_s) + 1e-9
+
+    @hypothesis.given(
+        arrivals=arrivals_st,
+        free_at=st.floats(0.0, 20.0, allow_nan=False),
+        policy=policy_st,
+    )
+    @hypothesis.settings(deadline=None, max_examples=100)
+    def test_coalescer_full_batch_never_delayed(arrivals, free_at, policy):
+        # with max_batch requests already waiting at free-time, launch
+        # is immediate — batch-full never waits out max_wait_s
+        size, launch = next_batch(arrivals, free_at, policy)
+        waiting = sum(1 for a in arrivals if a <= max(free_at, arrivals[0]))
+        if waiting >= policy.max_batch:
+            assert size == policy.max_batch
+            assert launch == max(free_at, arrivals[0])
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis (requirements-dev.txt)")
+    def test_coalescer_invariants():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 3 sasrec replicas, scripted kill, ladder armed
+# ---------------------------------------------------------------------------
+
+def test_real_route_cluster_kill_drill():
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models import recsys
+    from repro.serve import RecsysMIPSRoute
+
+    rcfg = get_arch("sasrec").SMOKE_CONFIG
+    params = recsys.init_params(rcfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    routes = [RecsysMIPSRoute(rcfg, params, k=5) for _ in range(3)]
+    disp = Dispatcher(
+        routes,
+        CoalescePolicy(max_batch=4, max_wait_s=0.002),
+        DispatchPolicy(max_failures=1),
+        fault_plan=ReplicaFaultPlan(die=((1, 2),)),
+        service_model=lambda measured, batch_no: 0.005,
+    )
+    disp.warmup()
+    for i in range(20):
+        disp.submit(
+            rng.integers(-1, rcfg.item_vocab, (rcfg.seq_len,)).astype(np.int32),
+            i * 0.001,
+        )
+    res = disp.drain()
+    assert len(res) == 20 and not res.unanswered
+    assert disp.bus.total("serve_replica_deaths") == 1
+    # answers are real top-k payloads from the surviving replicas
+    ids, scores = res[0].result
+    assert len(ids) == 5
+    assert all(r.replica != 1 or r.finish < 0.1 for r in res)

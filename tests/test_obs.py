@@ -159,6 +159,61 @@ def test_jsonl_sink_roundtrip_and_append(tmp_path):
     assert len(open(path).readlines()) == 3
 
 
+def test_jsonl_sink_retries_transient_write_failures(tmp_path):
+    # two injected failures, then success: the record must land after
+    # reopen+retry — a disk hiccup must not kill a serving process
+    path = str(tmp_path / "m.jsonl")
+    sink = JSONLSink(path, retries=3, backoff=0.0)
+    fails = [2]
+    real_write = sink._f.write
+
+    class Flaky:
+        def write(self, s):
+            if fails[0] > 0:
+                fails[0] -= 1
+                raise OSError("injected transient IO failure")
+            return real_write(s)
+
+        def close(self):
+            pass
+
+        def flush(self):
+            pass
+
+    sink._f = Flaky()
+    sink.emit({"t": 0, "kind": "gauge", "name": "g", "value": 1.0})
+    sink.close()
+    lines = [json.loads(line) for line in open(path)]
+    assert lines and lines[-1]["value"] == 1.0
+
+
+def test_jsonl_sink_disarms_after_exhausted_retries(tmp_path, capsys):
+    # persistent failure: the sink disarms itself (emits become no-ops)
+    # instead of raising into the serving loop
+    path = str(tmp_path / "m.jsonl")
+    sink = JSONLSink(path, retries=2, backoff=0.0)
+
+    class Dead:
+        def write(self, s):
+            raise OSError("disk on fire")
+
+        def close(self):
+            raise OSError("still on fire")
+
+        def flush(self):
+            pass
+
+    sink._f = Dead()
+    real_reopen = sink._reopen
+    sink._reopen = lambda: None  # reopen keeps handing back the dead handle
+    sink.emit({"t": 0, "kind": "gauge", "name": "g", "value": 1.0})
+    assert sink._f is None
+    assert "disarmed" in capsys.readouterr().err
+    sink.emit({"t": 0, "kind": "gauge", "name": "g", "value": 2.0})  # no-op
+    sink.close()  # and close stays safe
+    del real_reopen
+
+
 def test_human_log_sink_prints_only_log_records():
     out = io.StringIO()
     sink = HumanLogSink(stream=out)

@@ -57,14 +57,25 @@ class JSONLSink:
     saves got): a transient IO failure — disk hiccup, rotated file,
     NFS blip — must not kill a serving process mid-traffic. Between
     attempts the file handle is reopened (append mode, so survivors of
-    an earlier flush are kept). After ``retries`` consecutive failures
-    the sink disarms itself (``self._f = None``) and warns on stderr:
-    dropped telemetry beats a dead dispatcher."""
+    an earlier flush are kept). Total sleep across the ladder is capped
+    at ``max_sleep_s`` — the sink sits on the serving drain path, so a
+    persistently failing disk must not stall a batch interval; once the
+    budget is spent remaining retries reopen immediately. After
+    ``retries`` consecutive failures the sink disarms itself
+    (``self._f = None``) and warns on stderr: dropped telemetry beats a
+    dead dispatcher."""
 
-    def __init__(self, path: str, retries: int = 3, backoff: float = 0.05):
+    def __init__(
+        self,
+        path: str,
+        retries: int = 3,
+        backoff: float = 0.01,
+        max_sleep_s: float = 0.05,
+    ):
         self.path = path
         self.retries = retries
         self.backoff = backoff
+        self.max_sleep_s = max_sleep_s
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._f: IO[str] | None = open(path, "a")
 
@@ -83,6 +94,7 @@ class JSONLSink:
             line = json.dumps(record)
         except TypeError:
             line = json.dumps({**record, "value": repr(record.get("value"))})
+        slept = 0.0
         for attempt in range(self.retries + 1):
             try:
                 self._f.write(line + "\n")
@@ -90,7 +102,10 @@ class JSONLSink:
             except (OSError, ValueError):  # ValueError: write to closed file
                 if attempt == self.retries:
                     break
-                time.sleep(self.backoff * (2**attempt))
+                delay = min(self.backoff * (2**attempt), self.max_sleep_s - slept)
+                if delay > 0:
+                    time.sleep(delay)
+                    slept += delay
                 try:
                     self._reopen()
                 except OSError:

@@ -314,7 +314,7 @@ class Dispatcher:
         self.unanswered: list[Request] = []
         self.events: list[dict] = []
         self.dispatches = 0  # global dispatch counter (health cadence)
-        self._rr = -1  # round-robin cursor
+        self._rr = -1  # round-robin cursor: last picked replica id
         self._rid = 0
         self._service_obs: list[float] = []  # for the quantile hedge
 
@@ -346,6 +346,7 @@ class Dispatcher:
         queue, the policy, the fault plan and the (virtual) service
         times — never of host scheduling."""
         start = len(self.records)
+        ustart = len(self.unanswered)
         while self._queue:
             live = self._live()
             if not live:
@@ -366,7 +367,7 @@ class Dispatcher:
             self._health_round()
         self.bus.drain()
         return ClusterResult(
-            self.records[start:], unanswered=self.unanswered
+            self.records[start:], unanswered=self.unanswered[ustart:]
         )
 
     # -- dispatch internals ---------------------------------------------
@@ -376,8 +377,14 @@ class Dispatcher:
     def _pick(self, live: list[Replica], excluded: set[int]) -> Replica:
         pool = [r for r in live if r.id not in excluded] or live
         if self.policy.route == "round_robin":
-            self._rr += 1
-            return pool[self._rr % len(pool)]
+            # rotate over replica IDS, not pool indices: the pool shrinks
+            # and grows with deaths/exclusions, and a modulo cursor over a
+            # churning pool can hand the same replica consecutive batches.
+            # The cursor remembers the last picked id; the next pick is the
+            # smallest eligible id strictly greater, wrapping around.
+            ids = sorted(r.id for r in pool)
+            self._rr = next((i for i in ids if i > self._rr), ids[0])
+            return next(r for r in pool if r.id == self._rr)
         return min(pool, key=lambda r: (r.free_at, r.id))
 
     def _backoff(self, pending: _Pending) -> float:
@@ -456,9 +463,12 @@ class Dispatcher:
                 hedged = True
                 bfinish = bres[0].finish
                 if bfinish < finish:
-                    # backup wins: cancel the primary's tail
+                    # backup wins: cancel the primary's tail, and swap the
+                    # record source — downstream (_record, the timeout zip)
+                    # must see the WINNING dispatch's launch/finish/result,
+                    # not the cancelled primary's
                     replica.engine.free_at = min(replica.engine.free_at, bfinish)
-                    winner, finish = backup, bfinish
+                    winner, finish, res = backup, bfinish, bres
                     actual_launch = bres[0].launch
                 else:
                     backup.engine.free_at = min(backup.engine.free_at, finish)

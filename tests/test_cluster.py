@@ -218,6 +218,73 @@ def test_hedge_fires_and_first_answer_wins():
     assert all(win_by_rids[tuple(e["rids"])] != 0 for e in hedged_off_0)
 
 
+def test_hedge_win_record_carries_winning_dispatch():
+    # regression: when the backup wins, the ClusterRecord must carry the
+    # WINNING dispatch's launch/finish — not the cancelled primary's —
+    # so latency percentiles and the deadline check see first-answer-wins
+    plan = ReplicaFaultPlan(slow_from=((0, 1, 5 * SERVICE),))
+    disp = build(
+        plan=plan,
+        policy=DispatchPolicy(route="round_robin", hedge_after_s=2 * SERVICE),
+    )
+    offer(disp, 12)
+    res = disp.drain()
+    wins = [e for e in disp.events if e["kind"] == "hedge_win"]
+    assert wins
+    by_rid = {r.rid: r for r in res}
+    for e in wins:
+        for rid in e["rids"]:
+            rec = by_rid[rid]
+            assert rec.replica == e["replica"]
+            assert rec.finish == pytest.approx(e["t"])
+    # a batch hedged off the slow replica finished at the backup's healthy
+    # service span, not the primary's 6x one
+    hedged_off_0 = [
+        e for e in disp.events if e["kind"] == "hedge" and e["primary"] == 0
+    ]
+    assert hedged_off_0
+    for e in hedged_off_0:
+        for rid in e["rids"]:
+            rec = by_rid[rid]
+            assert rec.finish - rec.launch == pytest.approx(SERVICE)
+
+
+def test_unanswered_not_rereported_across_drains():
+    # regression: drain() must return only THIS cycle's stranded
+    # requests; the cumulative list stays on the dispatcher
+    plan = ReplicaFaultPlan(die=((0, 1), (1, 1), (2, 1)))
+    disp = build(
+        plan=plan, policy=DispatchPolicy(max_failures=1, health_every=0)
+    )
+    offer(disp, 8)
+    res1 = disp.drain()
+    assert len(res1.unanswered) == 8
+    for i in range(3):
+        disp.submit(100 + i, 1.0 + i * 0.001)
+    res2 = disp.drain()
+    assert [r.payload for r in res2.unanswered] == [100, 101, 102]
+    assert len(disp.unanswered) == 11
+
+
+def test_round_robin_rotates_fairly_after_death():
+    # the cursor walks replica IDS, so a shrunk pool still alternates —
+    # a modulo cursor over the filtered pool can repeat a replica
+    plan = ReplicaFaultPlan(die=((1, 2),))
+    disp = build(
+        plan=plan,
+        policy=DispatchPolicy(route="round_robin", max_failures=1),
+    )
+    offer(disp, 40)
+    res = disp.drain()
+    assert len(res) == 40 and not res.unanswered
+    death_i = next(i for i, e in enumerate(disp.events) if e["kind"] == "death")
+    after = [
+        e["replica"] for e in disp.events[death_i:] if e["kind"] == "dispatch"
+    ]
+    assert len(after) >= 4 and set(after) == {0, 2}
+    assert all(a != b for a, b in zip(after, after[1:])), after
+
+
 def test_hedge_quantile_arms_after_min_obs():
     disp = build(
         policy=DispatchPolicy(hedge_quantile=99.0, hedge_min_obs=4)

@@ -214,6 +214,35 @@ def test_jsonl_sink_disarms_after_exhausted_retries(tmp_path, capsys):
     del real_reopen
 
 
+def test_jsonl_sink_backoff_sleep_is_bounded(tmp_path, monkeypatch, capsys):
+    # the sink sits on the serving drain path: a persistently failing
+    # disk must not stall a batch interval — total ladder sleep is
+    # capped at max_sleep_s, then the sink disarms
+    import repro.obs.sinks as sinks_mod
+
+    slept = []
+    monkeypatch.setattr(sinks_mod.time, "sleep", lambda s: slept.append(s))
+    path = str(tmp_path / "m.jsonl")
+    sink = JSONLSink(path, retries=8, backoff=0.05, max_sleep_s=0.08)
+
+    class Dead:
+        def write(self, s):
+            raise OSError("disk on fire")
+
+        def close(self):
+            pass
+
+        def flush(self):
+            pass
+
+    sink._f = Dead()
+    sink._reopen = lambda: None
+    sink.emit({"t": 0, "kind": "gauge", "name": "g", "value": 1.0})
+    assert sink._f is None  # still disarms
+    assert sum(slept) <= 0.08 + 1e-9
+    capsys.readouterr()
+
+
 def test_human_log_sink_prints_only_log_records():
     out = io.StringIO()
     sink = HumanLogSink(stream=out)
